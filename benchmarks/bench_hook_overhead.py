@@ -1,0 +1,41 @@
+"""Paper Fig. 6: marker-hook execution fraction per nugget, normalized to
+total block executions — plus the low-overhead marker search's effect.
+
+The paper's cutoff guidance: markers executing >10%% (single-stream) of all
+block executions distort validation.  We report the fraction for the true
+end marker vs the searched low-overhead marker and the precision cost."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.configs import get_config, reduced
+from repro.core import (RandomSelector, create_nuggets, marker_hook_fraction,
+                        plan_markers)
+from repro.train import Trainer
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    cfg = reduced(get_config("olmoe-1b-7b"))
+    tr = Trainer(cfg, seq_len=32, batch=4, interval_steps=2.5, seed=0,
+                 donate=False)
+    tr.run(24)
+    prof = tr.profile()
+    sel = RandomSelector(n_samples=6, seed=0).select(prof)
+    step_uow = prof.step_uow
+    for idx in sel.interval_ids:
+        plain = plan_markers(prof, idx, search_distance=0.0)
+        cheap = plan_markers(prof, idx, search_distance=0.4 * step_uow)
+        rows.append((
+            f"hook_overhead/interval{idx}/end_marker",
+            plain.hook_fraction * 1e6,      # fraction (scaled for CSV)
+            f"frac={plain.hook_fraction:.4f};"
+            f"block={prof.table.names[plain.end.block]}"))
+        rows.append((
+            f"hook_overhead/interval{idx}/low_overhead_marker",
+            cheap.hook_fraction * 1e6,
+            f"frac={cheap.hook_fraction:.4f};"
+            f"precision_loss_uow={cheap.precision_loss_uow:.0f};"
+            f"block={prof.table.names[cheap.end.block]}"))
+    return rows

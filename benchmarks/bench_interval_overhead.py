@@ -1,0 +1,63 @@
+"""Paper Fig. 2/3: interval-analysis overhead — Nugget hooks vs uninstrumented
+execution vs a functional-simulation stand-in (op-by-op interpreted execution
+via jax.disable_jit, the gem5-ATOMIC analogue on this host).
+
+Reproduces the paper's ordering: hook overhead is a few percent; interpreted
+("functional simulation") execution is orders of magnitude slower.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from benchmarks.common import Row, time_fn
+from repro.configs import get_config, reduced
+from repro.train import Trainer
+
+ARCHS = ["qwen3-1.7b", "olmoe-1b-7b", "mamba2-780m", "zamba2-1.2b"]
+
+
+def _step_time(tr: Trainer, instrumented: bool, steps: int = 4) -> float:
+    state = tr.init_state()
+    fn = tr._step_fn if instrumented else tr._uninstrumented
+    batch = tr._device_batch(0)
+    state, m, _ = fn(state, batch)          # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for s in range(steps):
+        state, m, _ = fn(state, tr._device_batch(s))
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / steps
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        tr = Trainer(cfg, seq_len=32, batch=4, instrument=True, donate=False)
+        t_plain = _step_time(tr, False)
+        t_hook = _step_time(tr, True)
+        # functional-simulation stand-in: interpreted, op-by-op
+        state = tr.init_state()
+        batch = tr._device_batch(0)
+        import repro.train.state as TS
+        from repro.optim.schedule import constant
+        raw_step = TS.make_train_step(tr.model, tr.opt_cfg,
+                                      constant(1e-4), instrument=False)
+
+        def interp():
+            with jax.disable_jit():
+                s2, m, _ = raw_step(state, batch)
+                jax.block_until_ready(m["loss"])
+        t_interp = time_fn(interp, repeats=1, warmup=0)
+        rows.append((f"interval_overhead/{arch}/uninstrumented",
+                     t_plain * 1e6, "baseline"))
+        rows.append((f"interval_overhead/{arch}/nugget_hooks",
+                     t_hook * 1e6,
+                     f"slowdown={t_hook / t_plain:.3f}x"))
+        rows.append((f"interval_overhead/{arch}/functional_sim",
+                     t_interp * 1e6,
+                     f"slowdown={t_interp / t_plain:.1f}x"))
+    return rows

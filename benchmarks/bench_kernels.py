@@ -1,0 +1,80 @@
+"""Framework-layer kernel benchmarks: chunked (flash-style) vs reference
+attention and chunked-SSD vs sequential recurrence on this host, plus
+Pallas-kernel (interpret-mode) correctness spot checks."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, time_fn
+from repro.kernels import ops, ref
+from repro.models.attention import HeadLayout, attend_chunked, attend_reference
+from repro.configs.base import AttnConfig
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # attention: reference vs chunked at growing seq (memory-bound XLA path)
+    B, H, KV, hd = 1, 4, 2, 32
+    layout = HeadLayout.make(AttnConfig(H, KV, hd), 1)
+    for S in (256, 1024):
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, KV, hd))
+        k = jnp.repeat(k, layout.repeat, 2) if layout.repeat > 1 else k
+        v = jnp.repeat(jax.random.normal(ks[2], (B, S, KV, hd)),
+                       layout.repeat, 2) if layout.repeat > 1 else \
+            jax.random.normal(ks[2], (B, S, KV, hd))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        w = jnp.int32(-1)
+        f_ref = jax.jit(lambda q, k, v: attend_reference(
+            q, k, v, pos, pos, layout, causal=True, window=w))
+        f_chk = jax.jit(lambda q, k, v: attend_chunked(
+            q, k, v, pos, pos, layout, causal=True, window=w,
+            q_chunk=256, kv_chunk=256))
+        f_skp = jax.jit(lambda q, k, v: attend_chunked(
+            q, k, v, pos, pos, layout, causal=True, window=w,
+            q_chunk=256, kv_chunk=256, causal_skip=True))
+        o1 = f_ref(q, k, v); o2 = f_chk(q, k, v); o3 = f_skp(q, k, v)
+        err = float(jnp.max(jnp.abs(o1 - o2)))
+        err_s = float(jnp.max(jnp.abs(o1 - o3)))
+        t1 = time_fn(lambda: jax.block_until_ready(f_ref(q, k, v)))
+        t2 = time_fn(lambda: jax.block_until_ready(f_chk(q, k, v)))
+        t3 = time_fn(lambda: jax.block_until_ready(f_skp(q, k, v)))
+        rows.append((f"kernels/attn_reference/S={S}", t1 * 1e6, "oracle"))
+        rows.append((f"kernels/attn_chunked/S={S}", t2 * 1e6,
+                     f"speedup={t1 / t2:.2f}x;err={err:.1e}"))
+        rows.append((f"kernels/attn_causal_skip/S={S}", t3 * 1e6,
+                     f"speedup={t1 / t3:.2f}x;err={err_s:.1e}"))
+
+    # SSD: sequential recurrence vs chunked matmul form
+    Bb, S, nh, hp, N = 2, 512, 4, 32, 16
+    xh = jax.random.normal(ks[3], (Bb, S, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (Bb, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[5], (nh,)))
+    Bp = jax.random.normal(ks[6], (Bb, S, N))
+    Cp = jax.random.normal(ks[7], (Bb, S, N))
+    f_seq = jax.jit(lambda: ssd_reference(xh, dt, A, Bp, Cp)[0])
+    f_chk = jax.jit(lambda: ssd_chunked(xh, dt, A, Bp, Cp, 128)[0])
+    e = float(jnp.max(jnp.abs(f_seq() - f_chk())))
+    t1 = time_fn(lambda: jax.block_until_ready(f_seq()))
+    t2 = time_fn(lambda: jax.block_until_ready(f_chk()))
+    rows.append(("kernels/ssd_sequential", t1 * 1e6, "oracle"))
+    rows.append(("kernels/ssd_chunked", t2 * 1e6,
+                 f"speedup={t1 / t2:.2f}x;err={e:.1e}"))
+
+    # Pallas interpret-mode spot correctness (full sweeps in tests/)
+    q = jax.random.normal(ks[0], (1, 64, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 1, 16))
+    v = jax.random.normal(ks[2], (1, 64, 1, 16))
+    o = ops.flash_attention(q, k, v, group=2, causal=True, bq=32, bk=32)
+    w = ref.flash_attention_ref(q, k, v, group=2, causal=True)
+    rows.append(("kernels/pallas_flash_interpret", 0.0,
+                 f"maxerr={float(jnp.max(jnp.abs(o - w))):.1e}"))
+    return rows

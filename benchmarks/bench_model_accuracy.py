@@ -1,0 +1,68 @@
+"""Paper Fig. 11 / §V-B: nuggets as organic microbenchmarks to localize where
+the backend's view diverges from the portable-IR view ("microcoding").
+
+Per nugget-sized program we compare the portable jaxpr op histogram against
+the compiled-HLO op histogram and report the largest deltas — on gem5 this
+localized the paired-memory-op microcoding bug; here it localizes XLA
+fusion/lowering decisions (e.g. N jaxpr ops -> 1 fusion; dot -> cublas-like
+custom calls), which is exactly what a model-accuracy debugging session
+inspects first."""
+from __future__ import annotations
+
+import collections
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.configs import get_config, reduced
+from repro.core.hlo_analysis import histogram_delta, op_histogram
+from repro.core.unit_of_work import _as_jaxpr, _sub_jaxprs
+from repro.models.model_zoo import build_model
+
+
+def jaxpr_histogram(jaxpr, mult: float = 1.0) -> collections.Counter:
+    jaxpr = _as_jaxpr(jaxpr)
+    hist: collections.Counter = collections.Counter()
+    for eqn in jaxpr.eqns:
+        subs, _ = _sub_jaxprs(eqn)
+        if subs:
+            for sj, m in subs:
+                hist.update({k: v * m * mult
+                             for k, v in jaxpr_histogram(sj).items()})
+            hist[eqn.primitive.name] += mult
+        else:
+            hist[eqn.primitive.name] += mult
+    return hist
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for arch in ("qwen3-1.7b", "mamba2-780m"):
+        cfg = reduced(get_config(arch))
+        m = build_model(cfg)
+        params = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+        toks = jax.ShapeDtypeStruct((2, 32), jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+
+        def nugget_fn(p, b):
+            return m.loss(p, b)[0]
+
+        jaxpr = jax.make_jaxpr(nugget_fn)(params, batch)
+        jh = jaxpr_histogram(jaxpr)
+        compiled = jax.jit(nugget_fn).lower(params, batch).compile()
+        hh = op_histogram(compiled.as_text())
+
+        total_ir = sum(jh.values())
+        total_hlo = sum(hh.values())
+        rows.append((f"model_accuracy/{arch}/ir_ops", total_ir,
+                     f"hlo_ops={total_hlo};"
+                     f"fusion_ratio={total_ir / max(total_hlo, 1):.2f}"))
+        deltas = histogram_delta(
+            {k: int(v) for k, v in jh.items()},
+            {k: int(v) for k, v in hh.items()})
+        for op, a, b in deltas[:5]:
+            rows.append((f"model_accuracy/{arch}/delta/{op}", abs(a - b),
+                         f"ir={a};hlo={b}"))
+    return rows

@@ -1,0 +1,39 @@
+"""Roofline rows from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+One CSV row per (arch × shape × mesh) cell; requires artifacts/dryrun/
+(run ``python -m repro.launch.dryrun --all`` first).  Cells not yet compiled
+are reported as missing rather than failing the bench run."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from benchmarks.common import Row
+from repro.launch.roofline import analyze_cell, load_cells
+
+DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    if not os.path.isdir(DIR):
+        return [("roofline/missing", 0.0,
+                 "run: PYTHONPATH=src python -m repro.launch.dryrun --all")]
+    for cell in load_cells(DIR):
+        name = f"roofline/{cell.get('cell', '?')}"
+        status = cell.get("status", "?")
+        if status.startswith("skipped"):
+            rows.append((name, 0.0, status))
+            continue
+        if status != "ok":
+            rows.append((name, 0.0, f"status={status}"))
+            continue
+        r = analyze_cell(cell)
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((name, bound_s * 1e6,
+                     f"dominant={r['dominant']};"
+                     f"compute_s={r['compute_s']:.2e};"
+                     f"memory_s={r['memory_s']:.2e};"
+                     f"collective_s={r['collective_s']:.2e};"
+                     f"useful_flops_ratio={r['useful_ratio']:.2f};"
+                     f"roofline_frac={r['roofline_fraction']:.2f}"))
+    return rows

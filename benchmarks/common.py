@@ -1,0 +1,23 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable[[], None], *, repeats: int = 5,
+            warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def fmt_rows(rows: Iterable[Row]) -> str:
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)

@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV.  Select with --only substr."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_hook_overhead, bench_interval_overhead,
+                        bench_kernels, bench_model_accuracy,
+                        bench_prediction_error, bench_roofline,
+                        bench_speedup_prediction, bench_sync_scaling)
+from benchmarks.common import fmt_rows
+
+SUITES = [
+    ("interval_overhead(Fig2-3)", bench_interval_overhead),
+    ("sync_scaling(Fig4)", bench_sync_scaling),
+    ("prediction_error(Fig5)", bench_prediction_error),
+    ("hook_overhead(Fig6)", bench_hook_overhead),
+    ("speedup_prediction(Fig7-10)", bench_speedup_prediction),
+    ("model_accuracy(Fig11)", bench_model_accuracy),
+    ("kernels", bench_kernels),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in SUITES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            print(fmt_rows(rows), flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Batched serving with continuous batching + heterogeneous Nugget profiling.
+
+Prefill and decode iterations emit different hook streams; the interval
+profile mixes them — serving is the naturally phase-rich workload class.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core import KMeansSelector
+from repro.models.model_zoo import build_model
+from repro.serve import ServeEngine, SyntheticRequests
+
+
+def main():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng = ServeEngine(cfg, batch=4, max_seq=96, prefill_len=16,
+                      interval_steps=3.0)
+    gen = SyntheticRequests(cfg.vocab_size, prompt_len=12, mean_new=16,
+                            seed=0)
+    stats = eng.run(params, [gen.request(i) for i in range(12)])
+    print("serving stats:",
+          {k: round(v, 3) if isinstance(v, float) else v
+           for k, v in stats.items()})
+
+    profile = eng.profile()
+    mix = {k: eng.kinds_log.count(k) for k in set(eng.kinds_log)}
+    print(f"engine iterations by kind: {mix}")
+    print(f"intervals: {profile.n_intervals} "
+          f"(uow/step: prefill={profile.table.step_uow('prefill'):.0f}, "
+          f"decode={profile.table.step_uow('decode'):.0f})")
+    sel = KMeansSelector(seed=0).select(profile)
+    print(f"k-means picked {len(sel.interval_ids)} representative intervals "
+          f"with weights {[round(float(w), 2) for w in sel.weights]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Atomic, async, keep-N checkpointing with manifest + checksums.
+
+Layout::
+
+    <dir>/step_00000123/
+        arrays_p0.npz      # flattened keypath -> array (per process)
+        manifest.json      # step, keys, checksums, writer metadata
+    <dir>/LATEST           # name of last committed checkpoint (atomic rename)
+
+Commit protocol (crash-safe): write into ``.tmp-step_X``, fsync files, rename
+dir, then rewrite LATEST via tmp+rename.  A partially-written checkpoint can
+never be observed as committed — the restart path always reads LATEST.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _checksum(arrays: Dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes()[:1 << 20])
+    return h.hexdigest()[:16]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep_n: int = 3,
+                 process_index: int = 0, async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.pidx = process_index
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             *, blocking: bool = False) -> None:
+        # snapshot to host memory NOW (donated/updated buffers must not race)
+        arrays = _flatten(tree)
+        if self._pool is None or blocking:
+            self._write(step, arrays, extra or {})
+            return
+        self.wait()                       # only one in-flight save
+        self._pending = self._pool.submit(self._write, step, arrays,
+                                          extra or {})
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, arrays: Dict[str, np.ndarray],
+               extra: Dict) -> None:
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, f".tmp-{name}-{self.pidx}")
+        final = os.path.join(self.dir, name)
+        os.makedirs(tmp, exist_ok=True)
+        npz_path = os.path.join(tmp, f"arrays_p{self.pidx}.npz")
+        np.savez(npz_path, **arrays)
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays),
+            "checksum": _checksum(arrays),
+            "time": time.time(),
+            "process": self.pidx,
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        with self._lock:
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._commit_latest(name)
+            self._gc()
+
+    def _commit_latest(self, name: str) -> None:
+        tmp = os.path.join(self.dir, ".LATEST.tmp")
+        with open(tmp, "w") as f:
+            f.write(name)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, os.path.join(self.dir, "LATEST"))
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_"):
+                try:
+                    out.append(int(n[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            name = f.read().strip()
+        full = os.path.join(self.dir, name)
+        if not os.path.exists(os.path.join(full, "manifest.json")):
+            return None
+        return int(name[5:])
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                *, shardings: Any = None, verify: bool = True
+                ) -> Tuple[Any, Dict]:
+        """Restore into ``template``'s structure; optionally device_put with
+        ``shardings`` (elastic restore onto a different mesh)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        name = f"step_{step:08d}"
+        full = os.path.join(self.dir, name)
+        with open(os.path.join(full, "manifest.json")) as f:
+            manifest = json.load(f)
+        z = np.load(os.path.join(full, f"arrays_p{self.pidx}.npz"))
+        arrays = {k: z[k] for k in z.files}
+        if verify and _checksum(arrays) != manifest["checksum"]:
+            raise IOError(f"checksum mismatch restoring {full}")
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        shard_flat = (jax.tree.leaves(shardings,
+                                      is_leaf=lambda x: hasattr(x, "spec"))
+                      if shardings is not None else None)
+        for i, (path, leaf) in enumerate(flat_t):
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            arr = arrays[key]
+            if shard_flat is not None:
+                leaves.append(jax.device_put(arr, shard_flat[i]))
+            else:
+                leaves.append(jax.device_put(arr.astype(leaf.dtype)
+                                             if hasattr(leaf, "dtype") else arr))
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+        return tree, manifest.get("extra", {})

@@ -1,0 +1,30 @@
+"""Nugget-for-JAX: the paper's portable targeted-sampling framework.
+
+Pipeline (paper Fig. 1):
+  preparation  -> BlockTable (blocks_lm.build_block_table)
+  analysis     -> WorkMeter hooks + IntervalBuilder -> Profile
+  selection    -> select.{Random,KMeans,Systematic}Selector -> Selection
+  creation     -> nugget.create_nuggets (markers incl. low-overhead search)
+  validation   -> replay.ReplayEngine + validate.* (native, cross-platform)
+"""
+from repro.core.unit_of_work import IRCost, jaxpr_cost, trace_cost  # noqa: F401
+from repro.core.registry import BlockDef, BlockTable, Segment  # noqa: F401
+from repro.core.blocks_lm import build_block_table  # noqa: F401
+from repro.core.meter import init_meter, tick_step, read_meter, meter_value  # noqa: F401
+from repro.core.intervals import (  # noqa: F401
+    Interval, IntervalBuilder, Marker, Profile, build_profile_from_steps,
+)
+from repro.core.select import (  # noqa: F401
+    KMeansSelector, RandomSelector, Selection, SystematicSelector, SELECTORS,
+)
+from repro.core.markers import (  # noqa: F401
+    MarkerPlan, low_overhead_marker, marker_hook_fraction, plan_markers,
+)
+from repro.core.nugget import Nugget, create_nuggets, load_nuggets, save_nuggets  # noqa: F401
+from repro.core.replay import ReplayEngine, ReplayResult, SimpleRunner, measure_full_run  # noqa: F401
+from repro.core.validate import (  # noqa: F401
+    PlatformResult, consistency_report, nugget_variability, predict_total_time,
+    prediction_error, signature_divergence, speedup_error_matrix,
+)
+from repro.core.profile_store import load_profile, save_profile  # noqa: F401
+from repro.core import hlo_analysis  # noqa: F401

@@ -1,0 +1,198 @@
+"""Interval discovery + signatures (paper §III-C2), host side.
+
+The IntervalBuilder replays each step's hook stream (block ids + per-hook
+count-stamps, precomputed from the BlockTable) against the global unit-of-work
+counter, closing an interval whenever the counter crosses a multiple of the
+interval size — exactly the paper's hook logic.  Each interval gets:
+
+- a **BBV** (block-frequency vector incl. virtual/dynamic entries),
+- a **count-stamp vector** (global counter at the last execution of each
+  block within the interval),
+- the cumulative hit count of every block at its last execution (used to
+  derive markers = (block, required-hit-count) pairs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.registry import BlockTable
+
+
+@dataclasses.dataclass(frozen=True)
+class Marker:
+    block: int          # block id
+    hits: int           # cumulative executions of ``block`` since run start
+    uow: float          # counter value at the marked hook (for pro-rating)
+
+    def to_json(self):
+        return {"block": int(self.block), "hits": int(self.hits),
+                "uow": float(self.uow)}
+
+    @staticmethod
+    def from_json(d):
+        return Marker(d["block"], d["hits"], d["uow"])
+
+
+@dataclasses.dataclass
+class Interval:
+    idx: int
+    start_uow: float
+    end_uow: float
+    end_marker: Marker
+    bbv: np.ndarray              # [n_blocks] executions within interval
+    stamps: np.ndarray           # [n_blocks] uow at last exec (-1 = never)
+    hits_at_stamp: np.ndarray    # [n_blocks] cumulative hits at last exec
+    start_step: float            # fractional step position of interval start
+    end_step: float
+
+
+@dataclasses.dataclass
+class Profile:
+    table: BlockTable
+    interval_uow: float
+    intervals: List[Interval]
+    total_uow: float
+    n_steps: int
+    step_uow: float
+    dyn_history: Dict[str, np.ndarray]   # per-step dynamic values
+
+    @property
+    def n_intervals(self) -> int:
+        return len(self.intervals)
+
+    def bbv_matrix(self) -> np.ndarray:
+        return np.stack([iv.bbv for iv in self.intervals]) \
+            if self.intervals else np.zeros((0, self.table.n_blocks))
+
+    def start_marker(self, idx: int) -> Optional[Marker]:
+        """Start marker of interval ``idx`` = end marker of ``idx-1``."""
+        if idx == 0:
+            return None
+        return self.intervals[idx - 1].end_marker
+
+
+class IntervalBuilder:
+    def __init__(self, table: BlockTable, interval_uow: float):
+        assert interval_uow > 0
+        self.table = table
+        self.interval_uow = float(interval_uow)
+        self.ids, self.cum = table.expand()         # "default" stream
+        self.step_total = float(self.cum[-1])       # default-kind step UoW
+        self._cur_total = self.step_total
+        self.n = table.n_blocks
+        self._g = 0.0                               # global counter
+        self._cum_hits = np.zeros(self.n, np.int64)
+        self._bbv = np.zeros(self.n, np.float64)
+        self._stamps = np.full(self.n, -1.0)
+        self._hits_at = np.zeros(self.n, np.int64)
+        self._ivl_start = 0.0
+        self._ivl_start_step = 0.0
+        self._step = 0
+        self.intervals: List[Interval] = []
+        self._dyn: Dict[str, List] = {}
+        self._virtual = [(i, b) for i, b in enumerate(table.blocks)
+                         if b.virtual]
+
+    # ------------------------------------------------------------------
+    def add_step(self, dyn: Optional[Dict[str, Any]] = None,
+                 kind: str = "default"):
+        if kind == "default":
+            ids, cum = self.ids, self.cum
+        else:
+            ids, cum = self.table.expand(kind)
+        self._cur_total = float(cum[-1]) if len(cum) else 0.0
+        g0 = self._g
+        # record dynamic history
+        if dyn:
+            for k, v in dyn.items():
+                self._dyn.setdefault(k, []).append(np.asarray(v))
+
+        # boundary crossings within this step (counter hits multiples of I)
+        I = self.interval_uow
+        next_bound = (np.floor(g0 / I) + 1) * I
+        abs_cum = g0 + cum
+        start = 0
+        while next_bound <= abs_cum[-1] + 1e-9:
+            j = int(np.searchsorted(abs_cum, next_bound - 1e-9, side="left"))
+            j = min(j, len(ids) - 1)
+            self._consume(ids, cum, start, j + 1, g0)
+            self._close(abs_cum[j], ids[j],
+                        step_frac=self._step + (j + 1) / len(ids), dyn=dyn)
+            start = j + 1
+            # one hook may span several boundaries: the next boundary is the
+            # first multiple of I strictly beyond the closing hook (no
+            # zero-width intervals — paper hook semantics)
+            next_bound = (np.floor(abs_cum[j] / I + 1e-12) + 1) * I
+        if start < len(ids):
+            self._consume(ids, cum, start, len(ids), g0)
+        self._g = abs_cum[-1]
+        self._step += 1
+
+    def _consume(self, all_ids, all_cum, lo: int, hi: int, g0: float):
+        ids, cum = all_ids[lo:hi], all_cum[lo:hi]
+        if len(ids) == 0:
+            return
+        np.add.at(self._bbv, ids, 1.0)
+        np.add.at(self._cum_hits, ids, 1)
+        # last-write-wins fancy assignment = last execution per block
+        self._stamps[ids] = g0 + cum
+        self._hits_at[ids] = self._cum_hits[ids]
+
+    def _close(self, end_uow: float, end_block: int, step_frac: float,
+               dyn: Optional[Dict[str, Any]]):
+        bbv = self._bbv.copy()
+        # virtual signature entries: pro-rate this step's dynamic values by
+        # the uow fraction the interval took of the step
+        if dyn:
+            cur = self._cur_total    # self._g is still the step-start UoW here
+            frac = min(1.0, (end_uow - max(self._ivl_start, self._g))
+                       / cur) if cur else 0.0
+            for i, b in self._virtual:
+                if b.dyn_key in dyn:
+                    v = np.asarray(dyn[b.dyn_key], np.float64)
+                    val = v[b.dyn_index] if (b.dyn_index >= 0 and v.ndim) else v
+                    bbv[i] += float(val) * max(frac, 0.0)
+        marker = Marker(int(end_block), int(self._cum_hits[end_block]),
+                        float(end_uow))
+        self.intervals.append(Interval(
+            idx=len(self.intervals),
+            start_uow=self._ivl_start,
+            end_uow=float(end_uow),
+            end_marker=marker,
+            bbv=bbv,
+            stamps=self._stamps.copy(),
+            hits_at_stamp=self._hits_at.copy(),
+            start_step=self._ivl_start_step,
+            end_step=step_frac,
+        ))
+        self._bbv[:] = 0.0
+        self._stamps[:] = -1.0
+        self._hits_at[:] = 0
+        self._ivl_start = float(end_uow)
+        self._ivl_start_step = step_frac
+
+    # ------------------------------------------------------------------
+    def finalize(self) -> Profile:
+        dyn_hist = {k: np.stack(v) for k, v in self._dyn.items()}
+        return Profile(
+            table=self.table,
+            interval_uow=self.interval_uow,
+            intervals=self.intervals,
+            total_uow=self._g,
+            n_steps=self._step,
+            step_uow=self.step_total,
+            dyn_history=dyn_hist,
+        )
+
+
+def build_profile_from_steps(table: BlockTable, n_steps: int,
+                             interval_uow: float,
+                             dyn_per_step: Optional[List[Dict]] = None
+                             ) -> Profile:
+    b = IntervalBuilder(table, interval_uow)
+    for i in range(n_steps):
+        b.add_step(dyn_per_step[i] if dyn_per_step else None)
+    return b.finalize()

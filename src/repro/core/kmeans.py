@@ -1,0 +1,123 @@
+"""k-means++ / Lloyd / silhouette, in numpy (no sklearn dependency).
+
+Used by the K-means selector (paper §IV-B1: silhouette-selected k <= 50,
+cluster-size weights, SimPoint-style random projection of BBVs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def kmeans_pp_init(x: np.ndarray, k: int, rng: np.random.Generator
+                   ) -> np.ndarray:
+    n = x.shape[0]
+    centers = np.empty((k, x.shape[1]), x.dtype)
+    idx = rng.integers(n)
+    centers[0] = x[idx]
+    d2 = np.sum((x - centers[0]) ** 2, axis=1)
+    for i in range(1, k):
+        total = d2.sum()
+        if total <= 0 or not np.isfinite(total):
+            idx = rng.integers(n)            # degenerate: identical points
+        else:
+            idx = rng.choice(n, p=d2 / total)
+        centers[i] = x[idx]
+        d2 = np.minimum(d2, np.sum((x - centers[i]) ** 2, axis=1))
+    return centers
+
+
+def lloyd(x: np.ndarray, centers: np.ndarray, iters: int = 50
+          ) -> Tuple[np.ndarray, np.ndarray, float]:
+    k = centers.shape[0]
+    assign = np.zeros(x.shape[0], np.int64)
+    for _ in range(iters):
+        d2 = (np.sum(x * x, 1)[:, None] - 2 * x @ centers.T
+              + np.sum(centers * centers, 1)[None])
+        new_assign = np.argmin(d2, axis=1)
+        if np.array_equal(new_assign, assign) and _ > 0:
+            break
+        assign = new_assign
+        for c in range(k):
+            m = assign == c
+            if m.any():
+                centers[c] = x[m].mean(axis=0)
+    inertia = float(np.sum((x - centers[assign]) ** 2))
+    return assign, centers, inertia
+
+
+def kmeans(x: np.ndarray, k: int, *, seed: int = 0, restarts: int = 3
+           ) -> Tuple[np.ndarray, np.ndarray, float]:
+    rng = np.random.default_rng(seed)
+    best = None
+    for _ in range(restarts):
+        c0 = kmeans_pp_init(x, k, rng)
+        assign, centers, inertia = lloyd(x, c0.copy())
+        if best is None or inertia < best[2]:
+            best = (assign, centers, inertia)
+    return best
+
+
+def silhouette(x: np.ndarray, assign: np.ndarray,
+               max_points: int = 1500, seed: int = 0) -> float:
+    """Mean silhouette; subsampled for O(n^2) tractability."""
+    n = x.shape[0]
+    k = int(assign.max()) + 1
+    if k < 2 or n < 3:
+        return -1.0
+    rng = np.random.default_rng(seed)
+    if n > max_points:
+        sel = rng.choice(n, max_points, replace=False)
+    else:
+        sel = np.arange(n)
+    xs, asg = x[sel], assign[sel]
+    d = np.sqrt(np.maximum(
+        np.sum(xs * xs, 1)[:, None] - 2 * xs @ xs.T + np.sum(xs * xs, 1)[None],
+        0.0))
+    s_vals = []
+    for i in range(len(sel)):
+        same = asg == asg[i]
+        same[i] = False
+        a = d[i][same].mean() if same.any() else 0.0
+        b = np.inf
+        for c in range(k):
+            if c == asg[i]:
+                continue
+            m = asg == c
+            if m.any():
+                b = min(b, d[i][m].mean())
+        if not np.isfinite(b):
+            continue
+        s_vals.append((b - a) / max(a, b, 1e-30))
+    return float(np.mean(s_vals)) if s_vals else -1.0
+
+
+def random_projection(x: np.ndarray, dim: int = 15, seed: int = 0
+                      ) -> np.ndarray:
+    """SimPoint-style BBV dimensionality reduction."""
+    if x.shape[1] <= dim:
+        return x
+    rng = np.random.default_rng(seed)
+    proj = rng.normal(size=(x.shape[1], dim)) / np.sqrt(dim)
+    return x @ proj
+
+
+def pick_k_silhouette(x: np.ndarray, max_k: int = 50, seed: int = 0
+                      ) -> Tuple[int, np.ndarray, np.ndarray]:
+    """Silhouette-scored k selection (paper: #clusters <= 50)."""
+    n = x.shape[0]
+    ks = sorted(set(min(k, n - 1) for k in
+                    [2, 3, 4, 6, 8, 12, 16, 24, 32, 50] if k < n))
+    best = None
+    for k in ks:
+        if k > max_k or k < 2:
+            continue
+        assign, centers, _ = kmeans(x, k, seed=seed)
+        score = silhouette(x, assign, seed=seed)
+        if best is None or score > best[0]:
+            best = (score, k, assign, centers)
+    if best is None:
+        assign, centers, _ = kmeans(x, min(2, n), seed=seed)
+        return min(2, n), assign, centers
+    return best[1], best[2], best[3]

@@ -1,0 +1,71 @@
+"""WorkMeter: the in-step hook state (paper §III-C1).
+
+The meter is a small functional pytree threaded through the jit'd step.  Each
+step the hooks add the static per-step block counts + dynamic entries to the
+block-count vector and bump the two-limb uint32 global unit-of-work counter
+(jaxpr default integers are 32-bit; runs exceed 2**32 ops quickly).  Under
+data parallelism dynamic counts are psum'd across the "data" axis — the
+analogue of the paper's multithreaded hook synchronization whose scaling
+Fig. 4 measures (see benchmarks/bench_sync_scaling.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.registry import BlockTable
+
+
+def init_meter(table: BlockTable) -> Dict[str, jax.Array]:
+    return {
+        "uow_lo": jnp.zeros((), jnp.uint32),
+        "uow_hi": jnp.zeros((), jnp.uint32),
+        "counts": jnp.zeros((table.n_blocks,), jnp.int32),
+        "steps": jnp.zeros((), jnp.int32),
+    }
+
+
+def _add64(lo: jax.Array, hi: jax.Array, amount: int):
+    amt = jnp.uint32(amount & 0xFFFFFFFF)
+    hi_amt = jnp.uint32((amount >> 32) & 0xFFFFFFFF)
+    new_lo = lo + amt
+    carry = (new_lo < amt).astype(jnp.uint32)
+    return new_lo, hi + hi_amt + carry
+
+
+def meter_value(meter) -> int:
+    return (int(meter["uow_hi"]) << 32) | int(meter["uow_lo"])
+
+
+def tick_step(meter: Dict[str, jax.Array], table: BlockTable,
+              aux: Optional[Dict[str, jax.Array]] = None,
+              kind: str = "default") -> Dict[str, jax.Array]:
+    """The per-step hook: O(n_blocks) integer adds inside the jit'd step."""
+    static_counts = jnp.asarray(table.step_counts(kind), jnp.int32)
+    counts = meter["counts"] + static_counts
+    if aux:
+        for i, b in enumerate(table.blocks):
+            if b.virtual and b.dyn_key and b.dyn_key in aux:
+                v = aux[b.dyn_key]
+                val = v[b.dyn_index] if (b.dyn_index >= 0 and v.ndim) else v
+                counts = counts.at[i].add(val.astype(jnp.int32))
+    lo, hi = _add64(meter["uow_lo"], meter["uow_hi"],
+                    int(round(table.step_uow(kind))))
+    return {"uow_lo": lo, "uow_hi": hi, "counts": counts,
+            "steps": meter["steps"] + 1}
+
+
+def meter_psum(meter: Dict[str, jax.Array], axis_name: str):
+    """Cross-shard aggregation (inside shard_map): the sync cost of hooks."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), meter)
+
+
+def read_meter(meter) -> Dict[str, np.ndarray]:
+    return {
+        "uow": np.uint64(meter_value(meter)),
+        "counts": np.asarray(meter["counts"]),
+        "steps": int(meter["steps"]),
+    }

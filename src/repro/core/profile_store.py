@@ -1,0 +1,75 @@
+"""On-disk profile artifacts: interval profiles, selections, nuggets, replay
+results.  Directory layout::
+
+    <dir>/profile.npz      # bbvs, stamps, uows, markers, dyn history
+    <dir>/table.json       # BlockTable
+    <dir>/meta.json        # interval size, totals
+    <dir>/nuggets_<m>.json # per selection method
+    <dir>/results_<m>_<platform>.json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.intervals import Interval, Marker, Profile
+from repro.core.registry import BlockTable
+
+
+def save_profile(dirpath: str, profile: Profile) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    ivs = profile.intervals
+    np.savez_compressed(
+        os.path.join(dirpath, "profile.npz"),
+        bbvs=np.stack([iv.bbv for iv in ivs]) if ivs else np.zeros((0, 0)),
+        stamps=np.stack([iv.stamps for iv in ivs]) if ivs else np.zeros((0, 0)),
+        hits_at=np.stack([iv.hits_at_stamp for iv in ivs]) if ivs else np.zeros((0, 0)),
+        start_uow=np.array([iv.start_uow for iv in ivs]),
+        end_uow=np.array([iv.end_uow for iv in ivs]),
+        start_step=np.array([iv.start_step for iv in ivs]),
+        end_step=np.array([iv.end_step for iv in ivs]),
+        marker_block=np.array([iv.end_marker.block for iv in ivs], np.int64),
+        marker_hits=np.array([iv.end_marker.hits for iv in ivs], np.int64),
+        marker_uow=np.array([iv.end_marker.uow for iv in ivs]),
+        **{f"dyn_{k}": v for k, v in profile.dyn_history.items()},
+    )
+    with open(os.path.join(dirpath, "table.json"), "w") as f:
+        json.dump(profile.table.to_json(), f)
+    with open(os.path.join(dirpath, "meta.json"), "w") as f:
+        json.dump({"interval_uow": profile.interval_uow,
+                   "total_uow": profile.total_uow,
+                   "n_steps": profile.n_steps,
+                   "step_uow": profile.step_uow}, f)
+
+
+def load_profile(dirpath: str) -> Profile:
+    with open(os.path.join(dirpath, "table.json")) as f:
+        table = BlockTable.from_json(json.load(f))
+    with open(os.path.join(dirpath, "meta.json")) as f:
+        meta = json.load(f)
+    z = np.load(os.path.join(dirpath, "profile.npz"))
+    n = len(z["start_uow"])
+    intervals = []
+    for i in range(n):
+        intervals.append(Interval(
+            idx=i,
+            start_uow=float(z["start_uow"][i]),
+            end_uow=float(z["end_uow"][i]),
+            end_marker=Marker(int(z["marker_block"][i]),
+                              int(z["marker_hits"][i]),
+                              float(z["marker_uow"][i])),
+            bbv=z["bbvs"][i],
+            stamps=z["stamps"][i],
+            hits_at_stamp=z["hits_at"][i],
+            start_step=float(z["start_step"][i]),
+            end_step=float(z["end_step"][i]),
+        ))
+    dyn = {k[4:]: z[k] for k in z.files if k.startswith("dyn_")}
+    return Profile(table=table, interval_uow=meta["interval_uow"],
+                   intervals=intervals, total_uow=meta["total_uow"],
+                   n_steps=meta["n_steps"], step_uow=meta["step_uow"],
+                   dyn_history=dyn)

@@ -1,0 +1,136 @@
+"""Nugget replay engine (paper §III-E + §V-A experimental setup).
+
+A *platform* is anything that can run steps: a StepRunner wraps (step_fn,
+state-reset) so the same nuggets validate across dtype/XLA-option/mesh/impl
+platforms on this host, and across real TPU hosts in production.  Replay:
+
+1. position at the nugget's checkpoint step (``runner.reset``),
+2. fast-forward to the warmup marker (untimed — KVM-fast-forward analogue),
+3. run warmup steps (microarchitectural-state warmup analogue: here it warms
+   compilation caches, host caches and, for serving, the KV cache),
+4. time the marker-bounded region; boundary steps are pro-rated by UoW.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Protocol
+
+import numpy as np
+
+from repro.core.intervals import Profile
+from repro.core.nugget import Nugget
+
+
+class StepRunner(Protocol):
+    def reset(self, step: int) -> Any: ...
+    def run_step(self, state: Any, step: int) -> Any: ...
+    def sync(self, state: Any) -> None: ...
+
+
+@dataclasses.dataclass
+class SimpleRunner:
+    """Wraps a jit'd step closure + reset for replay."""
+    reset_fn: Callable[[int], Any]
+    step_fn: Callable[[Any, int], Any]
+    sync_fn: Optional[Callable[[Any], None]] = None
+
+    def reset(self, step: int) -> Any:
+        return self.reset_fn(step)
+
+    def run_step(self, state: Any, step: int) -> Any:
+        return self.step_fn(state, step)
+
+    def sync(self, state: Any) -> None:
+        if self.sync_fn is not None:
+            self.sync_fn(state)
+        else:
+            import jax
+            jax.block_until_ready(jax.tree.leaves(state)[0])
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    nugget_id: int
+    interval_idx: int
+    weight: float
+    region_time_s: float        # marker-bounded, UoW-pro-rated
+    steps_timed: int
+    warmup_steps: int
+    uow: float
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+class ReplayEngine:
+    def __init__(self, runner: StepRunner, profile: Profile):
+        self.runner = runner
+        self.profile = profile
+        self._compiled = False
+
+    def warm_compile(self) -> None:
+        """Throwaway step so the first nugget's timed region never includes
+        jit compilation (the simulator-warmup analogue for XLA)."""
+        if self._compiled:
+            return
+        state = self.runner.reset(0)
+        state = self.runner.run_step(state, 0)
+        self.runner.sync(state)
+        self._compiled = True
+
+    def replay(self, nugget: Nugget) -> ReplayResult:
+        self.warm_compile()
+        first_step = int(math.floor(nugget.start_step))
+        last_step = int(math.ceil(nugget.end_step)) - 1
+        warm_first = int(math.floor(nugget.warmup_step))
+
+        state = self.runner.reset(nugget.ckpt_step)
+        step = nugget.ckpt_step
+        # fast-forward (untimed) to warmup start, then warmup (executed,
+        # untimed — the microarchitectural-warmup analogue)
+        while step < first_step:
+            state = self.runner.run_step(state, step)
+            step += 1
+        self.runner.sync(state)
+        # timed region: ONE sync pair around the whole region so async
+        # dispatch pipelines exactly as in the full-run ground truth;
+        # boundary steps are pro-rated by their UoW overlap.
+        n_steps = last_step - first_step + 1
+        t0 = time.perf_counter()
+        while step <= last_step:
+            state = self.runner.run_step(state, step)
+            step += 1
+        self.runner.sync(state)
+        total = time.perf_counter() - t0
+        overlap = 0.0
+        for i in range(n_steps):
+            s = first_step + i
+            lo = max(nugget.start_step, s)
+            hi = min(nugget.end_step, s + 1)
+            overlap += max(0.0, hi - lo)
+        region = total * (overlap / max(n_steps, 1))
+        return ReplayResult(nugget.nugget_id, nugget.interval_idx,
+                            nugget.weight, region, n_steps,
+                            first_step - warm_first, nugget.uow)
+
+    def replay_all(self, nuggets: List[Nugget]) -> List[ReplayResult]:
+        return [self.replay(n) for n in nuggets]
+
+
+def measure_full_run(runner: StepRunner, n_steps: int,
+                     *, start: int = 0) -> float:
+    """Ground truth: wall time of the entire workload (paper §II-C).
+    One throwaway step first so jit compilation never pollutes the
+    measurement (all platforms are timed post-compile, like the paper's
+    post-warmup hardware runs)."""
+    state = runner.reset(start)
+    state = runner.run_step(state, start)
+    runner.sync(state)
+    state = runner.reset(start)
+    t0 = time.perf_counter()
+    for s in range(start, n_steps):
+        state = runner.run_step(state, s)
+    runner.sync(state)
+    return time.perf_counter() - t0

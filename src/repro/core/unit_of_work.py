@@ -1,0 +1,151 @@
+"""Unit of work: executed jaxpr primitive operations (DESIGN.md §2).
+
+The paper counts executed LLVM IR instructions; the portable IR of the JAX
+ecosystem is the jaxpr.  A block's static "IR size" is the number of jaxpr
+equations its traced body contains (recursing into scan/cond/pjit/remat with
+static trip counts), exactly as an LLVM IRBB's size is its instruction count.
+A FLOP-weighted variant is provided as a secondary unit of work — the paper
+notes the unit of work is a pluggable choice that shapes interval semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+# primitives that carry sub-jaxprs and their trip-count semantics
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr",
+                  "branches", "fun_jaxpr")
+
+
+def _sub_jaxprs(eqn) -> Tuple[list, int]:
+    """Returns ([(jaxpr, multiplier)], flag_unbounded)."""
+    prim = eqn.primitive.name
+    out, unbounded = [], 0
+    p = eqn.params
+    if prim == "scan":
+        out.append((p["jaxpr"], int(p["length"])))
+    elif prim == "while":
+        # unknown trip count: count one iteration, flag it (the paper's
+        # data-driven-loop caveat, §IV-A2)
+        out.append((p["body_jaxpr"], 1))
+        out.append((p["cond_jaxpr"], 1))
+        unbounded = 1
+    elif prim == "cond":
+        # executed ops = one branch; use the mean as the static estimate
+        brs = p["branches"]
+        for b in brs:
+            out.append((b, 1.0 / len(brs)))
+    else:
+        for k in _SUBJAXPR_KEYS:
+            if k in p and p[k] is not None and k != "branches":
+                out.append((p[k], 1))
+        if prim == "custom_vjp_call" and "fwd_jaxpr_thunk" in p:
+            pass
+    return out, unbounded
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if isinstance(j, jcore.ClosedJaxpr) else j
+
+
+_ELTWISE_FREE = {"reshape", "broadcast_in_dim", "squeeze", "transpose",
+                 "convert_element_type", "slice", "dynamic_slice",
+                 "dynamic_update_slice", "concatenate", "pad", "rev",
+                 "gather", "scatter", "scatter-add", "iota", "copy",
+                 "stop_gradient"}
+
+# pure annotations: not executed instructions — excluding them keeps the
+# unit of work identical across meshes/sharding plans (binary independence)
+_ANNOTATION_PRIMS = {"sharding_constraint", "device_put", "mesh_cast",
+                     "sharding_cast"}
+
+
+def eqn_flops(eqn) -> float:
+    """Cheap static FLOP estimate for one equation."""
+    prim = eqn.primitive.name
+    try:
+        if prim == "dot_general":
+            dnums = eqn.params["dimension_numbers"]
+            (lc, rc), (lb, rb) = dnums
+            lhs = eqn.invars[0].aval.shape
+            out = eqn.outvars[0].aval.shape
+            k = math.prod(lhs[i] for i in lc) if lc else 1
+            return 2.0 * math.prod(out) * k
+        if prim in _ELTWISE_FREE:
+            return 0.0
+        out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
+        if out_avals:
+            return float(sum(math.prod(a.shape) for a in out_avals
+                             if hasattr(a, "shape")))
+    except Exception:
+        pass
+    return 0.0
+
+
+def eqn_bytes(eqn) -> float:
+    """Operand+result bytes of one equation (no-fusion traffic upper bound)."""
+    total = 0.0
+    try:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "shape"):
+                total += math.prod(aval.shape) * getattr(
+                    aval.dtype, "itemsize", 4)
+    except Exception:
+        pass
+    return total
+
+
+@dataclasses.dataclass
+class IRCost:
+    ops: float            # executed jaxpr equations (unit of work)
+    flops: float          # FLOP-weighted secondary unit
+    unbounded_loops: int  # data-dependent while loops encountered
+    bytes: float = 0.0    # operand+result bytes (no-fusion upper bound)
+
+    def __add__(self, o: "IRCost") -> "IRCost":
+        return IRCost(self.ops + o.ops, self.flops + o.flops,
+                      self.unbounded_loops + o.unbounded_loops,
+                      self.bytes + o.bytes)
+
+    def scale(self, m: float) -> "IRCost":
+        return IRCost(self.ops * m, self.flops * m, self.unbounded_loops,
+                      self.bytes * m)
+
+
+def jaxpr_cost(jaxpr) -> IRCost:
+    jaxpr = _as_jaxpr(jaxpr)
+    total = IRCost(0.0, 0.0, 0)
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in _ANNOTATION_PRIMS:
+            continue
+        subs, unb = _sub_jaxprs(eqn)
+        if subs:
+            inner = IRCost(0.0, 0.0, unb)
+            for sj, mult in subs:
+                inner = inner + jaxpr_cost(sj).scale(mult)
+            total = total + inner
+            # the control-flow op itself counts as one executed op
+            total = total + IRCost(1.0, 0.0, 0)
+        else:
+            total = total + IRCost(1.0, eqn_flops(eqn), 0, eqn_bytes(eqn))
+    return total
+
+
+def trace_cost(fn: Callable, *args, **kwargs) -> IRCost:
+    """IR cost of ``fn`` traced at the given (ShapeDtypeStruct or array)
+    arguments — the analogue of an LLVM pass measuring an IRBB's size."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    return jaxpr_cost(jaxpr)
+
+
+def struct_like(tree):
+    """Map arrays -> ShapeDtypeStructs (cheap tracing of big param trees)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if hasattr(x, "shape") else x, tree)

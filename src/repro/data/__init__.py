@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    DEFAULT_DOMAINS, Domain, PhaseSchedule, SyntheticCorpus, default_schedule,
+)
+from repro.data.packing import pack_documents, packing_efficiency  # noqa: F401
+from repro.data.loader import PrefetchLoader, host_slice  # noqa: F401

@@ -1,0 +1,168 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Model code annotates params and activations with *logical* axis names; the
+active :class:`ShardingPlan` maps those to mesh axes.  Rules differ between
+training (2D FSDP×TP) and serving (TP + batch- or sequence-sharded KV), and
+per-arch overrides can disable tensor parallelism for tiny models (whisper).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Resolved mapping from logical axes to mesh axes."""
+    rules: Tuple[Tuple[str, Any], ...]     # logical -> mesh axis (or tuple / None)
+    tp_size: int                           # size of the tensor axis (1 = TP off)
+    dp_axes: Tuple[str, ...]               # batch/FSDP mesh axes
+    tp_axis: Optional[str]                 # tensor mesh axis name
+
+    def lookup(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        resolved, used = [], set()
+        for a in axes:
+            v = self.lookup(a)
+            # a mesh axis may appear at most once in a PartitionSpec
+            flat = v if isinstance(v, tuple) else ((v,) if v else ())
+            if any(m in used for m in flat):
+                v = None
+            else:
+                used.update(flat)
+            resolved.append(v)
+        return P(*resolved)
+
+
+def _mk(rules: Dict[str, Any], tp_size: int, dp_axes, tp_axis) -> ShardingPlan:
+    return ShardingPlan(tuple(rules.items()), tp_size, tuple(dp_axes), tp_axis)
+
+
+def logical_rules(mesh: Mesh, *, mode: str = "train",
+                  tp_enabled: bool = True,
+                  shard_seq: bool = False) -> ShardingPlan:
+    """Build the sharding plan for a mesh.
+
+    mode="train":  batch over (pod?,data); params 2D: FSDP("data") × TP("model").
+    mode="serve":  params TP only (replicated over data); batch over (pod?,data)
+                   unless ``shard_seq`` (long-context) — then KV seq over "data".
+    """
+    names = mesh.axis_names
+    pod = "pod" if "pod" in names else None
+    data = "data" if "data" in names else None
+    model = "model" if "model" in names else None
+    if not tp_enabled:
+        model = None
+    batch_axes = tuple(a for a in (pod, data) if a)
+    if shard_seq:
+        # long-context decode: batch=1 — the "data" axis shards the KV
+        # sequence instead of the batch
+        batch_axes = ()
+    batch = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    fsdp = data if mode in ("train", "serve_fsdp") and not shard_seq else None
+    tp_size = int(mesh.shape["model"]) if (model and "model" in names) else 1
+
+    rules: Dict[str, Any] = {
+        "batch": batch,
+        "embed": fsdp,
+        "mlp": model,
+        "heads": model,
+        "kv_heads": model,
+        "head_dim": None,
+        "vocab": model,
+        "layer": None,
+        "experts": model,
+        "expert_mlp": None,
+        "ssm_inner": model,
+        "ssm_state": None,
+        "conv": None,
+        "act_embed": None,        # activation d_model dim
+        "act_heads": model,       # activation head dim
+        "act_vocab": model,       # logits vocab dim
+        "kv_seq": ("data" if (shard_seq and data) else None),
+        "seq": None,
+    }
+    return _mk(rules, tp_size, batch_axes, model)
+
+
+# --------------------------------------------------------------------------
+# Active-plan context: model code calls shard(x, *logical_axes); it is a
+# no-op unless a plan is active (tests / single-device runs).
+# --------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def set_rules(plan: Optional[ShardingPlan]):
+    _STATE.plan = plan
+
+
+def active_rules() -> Optional[ShardingPlan]:
+    return getattr(_STATE, "plan", None)
+
+
+@contextlib.contextmanager
+def use_rules(plan: Optional[ShardingPlan]):
+    prev = active_rules()
+    set_rules(plan)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    plan = active_rules()
+    if plan is None:
+        return x
+    spec = plan.spec(axes)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def spec_for(axes: Sequence[Optional[str]]) -> P:
+    plan = active_rules()
+    if plan is None:
+        return P()
+    return plan.spec(axes)
+
+
+def plan_for(mesh: Mesh, arch_name: str, mode: str, shape_name: str = "",
+             param_count: int = 0) -> ShardingPlan:
+    """Per-arch overrides:
+
+    - tiny models (whisper) skip TP entirely — replicating a 39 M-param model
+      beats paying collectives for 24-wide matmuls;
+    - long_500k shards the KV sequence over "data" (batch=1);
+    - big-arch serving turns on FSDP-style weight sharding over "data" when
+      bf16 params / tp_size would exceed ~half of v5e HBM (mistral-123B,
+      internvl-76B, llama4-scout served on 256 chips need 2D weight sharding).
+    """
+    tp_enabled = arch_name not in ("whisper-tiny",)
+    shard_seq = shape_name == "long_500k"
+    tp = int(mesh.shape.get("model", 1)) if tp_enabled else 1
+    if mode == "serve" and param_count * 2 / max(tp, 1) > 8e9:
+        mode = "serve_fsdp"
+    return logical_rules(mesh, mode=mode, tp_enabled=tp_enabled,
+                         shard_seq=shard_seq)
+
+
+def params_shardings(mesh: Mesh, plan: ShardingPlan, axes_tree) -> Any:
+    """Map an axes pytree (tuples of logical names) to NamedShardings."""
+    def _one(axes):
+        return NamedSharding(mesh, plan.spec(axes))
+    return jax.tree.map(_one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,107 @@
+"""Pallas TPU flash-decode: single-token attention over a long KV cache,
+partitioned over kv blocks with online-softmax (LSE) combination — the
+kernel twin of the seq-sharded decode softmax the SPMD partitioner builds
+for ``long_500k`` (DESIGN.md).
+
+Grid (B, H, nK), kv innermost; per-row cache lengths come in as a [B] array
+read per block; scratch carries (m, l, acc) per (b, h).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:                                   # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, bk: int, n_kv: int,
+                   cap: float, scale: float):
+    i_kv = pl.program_id(2)
+
+    @pl.when(i_kv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0, :].astype(jnp.float32)          # [hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (k @ q) * scale                                # [bk]
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+
+    cur = len_ref[0] - 1                               # query position
+    k_pos = i_kv * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)[:, 0]
+    d = cur - k_pos
+    win = win_ref[0]
+    ok = (d >= 0) & ((win < 0) | (d < win))
+    s = jnp.where(ok, s, NEG_INF)
+    s = s[None, :]                                     # [1, bk]
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + p @ v
+    m_scr[...] = m_new
+
+    @pl.when(i_kv == n_kv - 1)
+    def _write():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, 0, :] = (acc_scr[...] / l)[0].astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 lengths: jax.Array, *, group: int,
+                 window: Optional[jax.Array] = None, cap: float = 0.0,
+                 bk: int = 256, interpret: bool = True) -> jax.Array:
+    """q: [B,1,H,hd]; caches: [B,S,KV,hd]; lengths: [B] (valid entries incl.
+    the current token)."""
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    bk = min(bk, s)
+    n_k = -(-s // bk)
+    pad_k = n_k * bk - s
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    win = jnp.asarray([-1 if window is None else window], jnp.int32) \
+        if not isinstance(window, jax.Array) else window.reshape(1)
+    lengths = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(_decode_kernel, bk=bk, n_kv=n_k, cap=cap,
+                               scale=1.0 / math.sqrt(hd))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, ik: (bb,)),
+            pl.BlockSpec((1,), lambda bb, hh, ik: (0,)),
+            pl.BlockSpec((1, 1, 1, hd), lambda bb, hh, ik: (bb, 0, hh, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bb, hh, ik: (bb, ik, hh // group, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda bb, hh, ik: (bb, ik, hh // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda bb, hh, ik: (bb, 0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, h, hd), q.dtype),
+        scratch_shapes=([_VMEM((1, 1), jnp.float32),
+                         _VMEM((1, 1), jnp.float32),
+                         _VMEM((1, hd), jnp.float32)] if _VMEM else []),
+        interpret=interpret,
+    )(lengths, win, q, k_cache, v_cache)
+    return out

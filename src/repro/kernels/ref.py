@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every kernel (the allclose targets for the
+shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, group: int, causal: bool = True,
+                        window=None, cap: float = 0.0) -> jax.Array:
+    """q: [B,S,H,hd]; k/v: [B,Sk,KV,hd]."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(hd)
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    d = qp - kp
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= d >= 0
+    w = -1 if window is None else int(window)
+    if w >= 0:
+        ok &= d < w
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_decode_ref(q, k_cache, v_cache, lengths, *, group: int,
+                     window=None, cap: float = 0.0) -> jax.Array:
+    """q: [B,1,H,hd]; caches [B,S,KV,hd]; lengths [B]."""
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    kr = jnp.repeat(k_cache, group, axis=2)
+    vr = jnp.repeat(v_cache, group, axis=2)
+    sc = jnp.einsum("bohd,bkhd->bhk", q.astype(jnp.float32),
+                    kr.astype(jnp.float32)) / math.sqrt(hd)
+    if cap > 0:
+        sc = cap * jnp.tanh(sc / cap)
+    cur = (lengths - 1)[:, None]
+    kp = jnp.arange(s)[None, :]
+    d = cur - kp
+    ok = d >= 0
+    w = -1 if window is None else int(window)
+    if w >= 0:
+        ok &= d < w
+    sc = jnp.where(ok[:, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, vr.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)
+
+
+def ssd_ref(xh, dt, A, Bp, Cp):
+    """Sequential SSD recurrence oracle.
+    xh: [B,S,nh,hp]; dt: [B,S,nh]; A: [nh]; Bp/Cp: [B,S,N].
+    Returns (y [B,S,nh,hp] f32, h_final [B,nh,hp,N] f32)."""
+    b, s, nh, hp = xh.shape
+    n = Bp.shape[-1]
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs
+        a = jnp.exp(dtt * A[None])
+        dx = xt * dtt[..., None]
+        h = a[..., None, None] * h + jnp.einsum("bhp,bn->bhpn", dx, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hp, n), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bp.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cp.astype(jnp.float32), 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

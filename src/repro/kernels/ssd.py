@@ -1,0 +1,107 @@
+"""Pallas TPU Mamba2/SSD intra-chunk kernel.
+
+The SSD layer splits into (a) an O(q^2) *intra-chunk* part (attention-like
+masked-decay matmuls — the MXU hot spot) and (b) an O(nchunk) sequential
+state recurrence.  The kernel computes, per (batch, head, chunk):
+
+    y_intra = (L ∘ (C B^T)) Xdt          [q, hp]
+    s_chunk = B^T (decay_out ∘ Xdt)      [hp, N] contribution to the state
+    decay   = exp(cum[-1])               total chunk decay
+
+The cheap inter-chunk recurrence + C·h_in inter term run as a lax.scan in
+``ops.ssd`` — this mirrors how the CUDA SSD kernel is adapted to the TPU's
+(MXU + sequential-grid) execution model (DESIGN.md §2 hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:                                   # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, s_ref, dec_ref, *, q: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [q, hp]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [q]
+    A = a_ref[0]                                       # scalar (<0)
+    B = b_ref[0, 0].astype(jnp.float32)                # [q, N]
+    C = c_ref[0, 0].astype(jnp.float32)                # [q, N]
+
+    la = dt * A                                        # log decay per step
+    cum = jnp.cumsum(la)                               # [q]
+    xdt = x * dt[:, None]
+
+    rel = cum[:, None] - cum[None, :]                  # [q, q]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    Lk = jnp.exp(jnp.where(tri, rel, -jnp.inf))
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # [q,q]
+    y_ref[0, :, 0, :] = (jax.lax.dot_general(
+        Lk * cb, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)).astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cum[-1] - cum)                 # [q]
+    s_chunk = jax.lax.dot_general(
+        xdt * decay_out[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [hp, N]
+    s_ref[0, 0, 0] = s_chunk.astype(s_ref.dtype)
+    dec_ref[0, 0, 0] = jnp.exp(cum[-1])
+
+
+def ssd_intra(xh: jax.Array, dt: jax.Array, A: jax.Array, Bp: jax.Array,
+              Cp: jax.Array, chunk: int, *, interpret: bool = True):
+    """xh: [B,S,nh,hp]; dt: [B,S,nh] f32; A: [nh]; Bp/Cp: [B,S,N].
+    Returns (y_intra [B,S,nh,hp] f32, s_chunk [B,nc,nh,hp,N] f32,
+    decay [B,nc,nh] f32, cum [B,nc,q,nh])."""
+    b, s, nh, hp = xh.shape
+    n = Bp.shape[-1]
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bp, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(Cp, ((0, 0), (0, pad), (0, 0)))
+    s_pad = nc * q
+    Bq = Bp.reshape(b, nc, q, n)
+    Cq = Cp.reshape(b, nc, q, n)
+
+    kernel = functools.partial(_ssd_kernel, q=q)
+    y, s_chunk, dec = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, hp), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, q, 1), lambda bb, hh, cc: (bb, cc, hh)),
+            pl.BlockSpec((1,), lambda bb, hh, cc: (hh,)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, hh, cc: (bb, cc, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, hh, cc: (bb, cc, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, hp), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, 1, 1, hp, n), lambda bb, hh, cc: (bb, cc, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, hh, cc: (bb, cc, hh)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s_pad, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh, hp, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xh, dt, A, Bq, Cq)
+    # cum is recomputed cheaply outside for the inter-chunk term
+    la = (dt * A[None, None, :]).reshape(b, nc, q, nh)
+    cum = jnp.cumsum(la, axis=2)
+    return y, s_chunk, dec, cum

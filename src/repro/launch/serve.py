@@ -1,0 +1,51 @@
+"""Serving launcher (batched requests, continuous batching).
+
+Example:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--prefill-len", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile-out")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models.model_zoo import build_model
+    from repro.serve import ServeEngine, SyntheticRequests
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, n_layers=4, d_model=128, d_ff=256, vocab=1024)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    eng = ServeEngine(cfg, batch=args.batch, max_seq=args.max_seq,
+                      prefill_len=args.prefill_len,
+                      temperature=args.temperature, seed=args.seed)
+    gen = SyntheticRequests(cfg.vocab_size, prompt_len=args.prefill_len,
+                            mean_new=24, seed=args.seed)
+    stats = eng.run(params, [gen.request(i) for i in range(args.requests)])
+    print(json.dumps(stats, indent=1))
+    if args.profile_out:
+        from repro.core import save_profile
+        save_profile(args.profile_out, eng.profile())
+        print("profile saved to", args.profile_out)
+
+
+if __name__ == "__main__":
+    main()

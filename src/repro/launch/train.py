@@ -1,0 +1,67 @@
+"""Training launcher.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --steps 50 --ckpt-dir /tmp/ck --profile-out /tmp/prof
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-feasible)")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--interval-steps", type=float, default=2.0)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--no-instrument", action="store_true")
+    ap.add_argument("--profile-out")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    from repro.configs import get_config, reduced
+    from repro.optim.adamw import AdamWConfig
+    from repro.optim.schedule import linear_warmup_cosine
+    from repro.train import Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, n_layers=4, d_model=128, d_ff=256, vocab=1024,
+                      seq=args.seq_len)
+    tr = Trainer(cfg, seq_len=args.seq_len, batch=args.batch,
+                 opt=AdamWConfig(lr=args.lr),
+                 lr_fn=linear_warmup_cosine(args.lr, args.steps // 10 + 1,
+                                            args.steps),
+                 seed=args.seed,
+                 instrument=not args.no_instrument,
+                 interval_steps=args.interval_steps,
+                 microbatch=args.microbatch,
+                 ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    state = tr.run(args.steps, log_every=args.log_every)
+    print(json.dumps({
+        "final_loss": tr.metrics_history[-1]["loss"],
+        "mean_step_s": sum(tr.step_times[1:]) / max(len(tr.step_times) - 1, 1),
+        "stragglers": tr.watchdog_report().slow_steps,
+    }, indent=1))
+    if args.profile_out and not args.no_instrument:
+        from repro.core import save_profile
+        save_profile(args.profile_out, tr.profile())
+        print("profile saved to", args.profile_out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""GQA attention: reference (quadratic), chunked (streaming softmax), pallas.
+
+TPU-mesh head padding
+---------------------
+The production mesh has a 16-way ``model`` axis, but several assigned archs
+have head counts not divisible by 16 (llama4/qwen2.5: 40 q heads, 8 kv heads).
+JAX rejects uneven input shardings, so the parameter layout pads q heads up to
+a multiple of the TP size (pad heads are zero-init and **masked out of the
+output**, keeping the math of the assigned arch exact) and expands kv heads by
+replication slots (Megatron-style replicated KV for tp > n_kv_heads).  The
+FLOP overhead of padding is visible in the roofline MODEL_FLOPS/HLO ratio and
+is one of the §Perf levers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadLayout:
+    n_heads: int          # real q heads
+    n_kv: int             # real kv heads
+    h_pad: int            # padded q slots (divisible by tp)
+    kv_pad: int           # padded kv slots (divisible by tp, divides h_pad)
+    repeat: int           # kv replication factor kv_pad / n_kv
+    head_dim: int
+
+    @staticmethod
+    def make(a: AttnConfig, tp: int) -> "HeadLayout":
+        h, kv = a.n_heads, a.n_kv_heads
+        assert h % kv == 0, (h, kv)
+        # smallest integer replication r with tp | kv*r (exact kv copies)
+        r = tp // math.gcd(kv, tp)
+        kv_pad = kv * r
+        lcm = tp * kv_pad // math.gcd(tp, kv_pad)
+        h_pad = lcm * math.ceil(max(h, 1) / lcm)
+        return HeadLayout(h, kv, h_pad, kv_pad, r, a.head_dim)
+
+    @property
+    def group(self) -> int:            # q slots per kv slot
+        return self.h_pad // self.kv_pad
+
+    @property
+    def g_real(self) -> int:           # q slots per REAL kv head
+        return self.h_pad // self.n_kv
+
+    def head_mask(self) -> np.ndarray:
+        """[h_pad] 1.0 for real q heads, 0.0 for structural padding."""
+        real_per_group = self.n_heads // self.n_kv
+        s = np.arange(self.h_pad)
+        return ((s % self.g_real) < real_per_group).astype(np.float32)
+
+    @property
+    def n_pad(self) -> int:
+        return self.h_pad - self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(a: AttnConfig, d: int, layout: HeadLayout) -> Dict[str, Any]:
+    hd = a.head_dim
+    kv_axes = (("embed", "kv_heads", "head_dim") if layout.repeat == 1
+               else ("embed", None, None))
+    mask = layout.head_mask()
+
+    def q_init(key, shape):
+        w = 0.02 * jax.random.normal(key, shape)
+        return w * mask[None, :, None]          # zero the pad-head columns
+
+    specs: Dict[str, Any] = {
+        "wq": {"kernel": ParamSpec((d, layout.h_pad, hd),
+                                   ("embed", "heads", "head_dim"),
+                                   init_fn=q_init)},
+        "wk": {"kernel": ParamSpec((d, layout.n_kv, hd), kv_axes, "scaled")},
+        "wv": {"kernel": ParamSpec((d, layout.n_kv, hd), kv_axes, "scaled")},
+        "wo": {"kernel": ParamSpec((layout.h_pad, hd, d),
+                                   ("heads", "head_dim", "embed"), "scaled")},
+    }
+    if a.qkv_bias:
+        specs["wq"]["bias"] = ParamSpec((layout.h_pad, hd),
+                                        ("heads", "head_dim"), "zeros")
+        specs["wk"]["bias"] = ParamSpec((layout.n_kv, hd),
+                                        (kv_axes[1], kv_axes[2]), "zeros")
+        specs["wv"]["bias"] = ParamSpec((layout.n_kv, hd),
+                                        (kv_axes[1], kv_axes[2]), "zeros")
+    if a.qk_norm:
+        specs["q_norm"] = {"scale": ParamSpec((hd,), (None,), "ones")}
+        specs["k_norm"] = {"scale": ParamSpec((hd,), (None,), "ones")}
+    return specs
+
+
+def _proj(p, x, heads_axes, dtype):
+    y = jnp.einsum("bsd,dhk->bshk", x.astype(dtype), L.get_kernel(p, dtype))
+    if "bias" in p:
+        y = y + p["bias"].astype(dtype)
+    return shard(y, *heads_axes)
+
+
+def qkv(params, a: AttnConfig, layout: HeadLayout, x: jax.Array,
+        positions: jax.Array, dtype, *, rope: bool = True,
+        kv_x: Optional[jax.Array] = None, kv_positions=None):
+    """Project to padded-slot q and kv-slot k/v, applying qk-norm + RoPE."""
+    kv_x = x if kv_x is None else kv_x
+    q = _proj(params["wq"], x, ("batch", "seq", "act_heads", None), dtype)
+    k = _proj(params["wk"], kv_x, ("batch", "seq", None, None), dtype)
+    v = _proj(params["wv"], kv_x, ("batch", "seq", None, None), dtype)
+    if a.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+        k = L.rmsnorm(params["k_norm"], k)
+    if rope:
+        q = L.apply_rope(q, positions, a.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = L.apply_rope(k, kpos, a.rope_theta)
+    if layout.repeat > 1:
+        k = jnp.repeat(k, layout.repeat, axis=2)
+        v = jnp.repeat(v, layout.repeat, axis=2)
+    k = shard(k, "batch", "kv_seq", "act_heads", None)
+    v = shard(v, "batch", "kv_seq", "act_heads", None)
+    return q, k, v
+
+
+def out_proj(params, layout: HeadLayout, ctx: jax.Array, dtype) -> jax.Array:
+    mask = jnp.asarray(layout.head_mask(), dtype)
+    ctx = ctx * mask[None, None, :, None]        # kill structural pad heads
+    y = jnp.einsum("bshk,hkd->bsd", ctx.astype(dtype),
+                   L.get_kernel(params["wo"], dtype))
+    return shard(y, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_pos, k_pos, window, causal: bool):
+    """Additive mask bias [..., Sq, Sk].  window: traced int32, <0 = global."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    win_ok = (window < 0) | (d < window)
+    ok &= win_ok
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core attention impls (q: [B,Sq,Hp,hd], k/v: [B,Sk,KVp,hd])
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k, group: int):
+    """-> [B, KVp, G, Sq, Sk] in f32."""
+    b, sq, hp, hd = q.shape
+    qg = q.reshape(b, sq, hp // group, group, hd)
+    return jnp.einsum("bsngk,btnk->bngst", qg.astype(jnp.float32),
+                      k.astype(jnp.float32)) / math.sqrt(hd)
+
+
+def _gqa_out(probs, v, hp: int):
+    b, n, g, sq, sk = probs.shape
+    ctx = jnp.einsum("bngst,btnk->bsngk", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, sq, hp, v.shape[-1])
+
+
+def attend_reference(q, k, v, q_pos, k_pos, layout: HeadLayout, *,
+                     causal: bool, window, cap: float = 0.0,
+                     kv_len=None) -> jax.Array:
+    scores = _gqa_scores(q, k, layout.group)
+    scores = L.softcap(scores, cap)
+    bias = _mask_bias(q_pos, k_pos, window, causal)
+    if kv_len is not None:                       # decode: mask empty cache slots
+        bias = bias + jnp.where(k_pos < kv_len, 0.0, -1e30)[..., None, :]
+    scores = scores + bias[:, None, None] if bias.ndim == 3 else scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, layout.h_pad).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, q_pos, k_pos, layout: HeadLayout, *,
+                   causal: bool, window, cap: float = 0.0,
+                   q_chunk: int = 1024, kv_chunk: int = 1024,
+                   causal_skip: bool = False) -> jax.Array:
+    """Streaming-softmax (flash-style) attention in pure lax.  Exact.
+
+    Scans q in blocks; for each q block scans kv blocks carrying running
+    (max, denom, acc).  ``causal_skip`` unrolls the q loop and truncates each
+    inner scan at the causal frontier (§Perf lever: removes the ~2× masked
+    FLOPs of the dense schedule).
+    """
+    b, sq, hp, hd = q.shape
+    sk = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    nq, nk = -(-sq // qc), -(-sk // kc)
+    pad_q, pad_k = nq * qc - sq, nk * kc - sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=2 ** 30)
+
+    g = layout.group
+    n = hp // g
+    kb = k.reshape(b, nk, kc, n, hd)
+    vb = v.reshape(b, nk, kc, n, hd)
+    kpb = k_pos.reshape(b, nk, kc)
+
+    def q_block(qi, kv_hi):
+        qs = q[:, qi * qc:(qi + 1) * qc]
+        qp = q_pos[:, qi * qc:(qi + 1) * qc]
+        qg = qs.reshape(b, qc, n, g, hd).astype(jnp.float32)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kj, vj, kpj = xs                        # [b,kc,n,hd],[b,kc]
+            s = jnp.einsum("bsngk,btnk->bngst", qg,
+                           kj.astype(jnp.float32)) / math.sqrt(hd)
+            s = L.softcap(s, cap)
+            s = s + _mask_bias(qp, kpj, window, causal)[:, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l = l * scale + jnp.sum(p, axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bngst,btnk->bngsk", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, n, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, n, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, n, g, qc, hd), jnp.float32)
+        xs = (jnp.moveaxis(kb, 1, 0)[:kv_hi], jnp.moveaxis(vb, 1, 0)[:kv_hi],
+              jnp.moveaxis(kpb, 1, 0)[:kv_hi])
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l[..., None])                  # [b,n,g,qc,hd]
+        return jnp.moveaxis(out, 3, 1).reshape(b, qc, hp, hd)
+
+    if causal_skip and causal:
+        # unrolled q loop; inner scan only over kv blocks at/below the diagonal
+        outs = [q_block(i, min(nk, (((i + 1) * qc - 1) // kc) + 1))
+                for i in range(nq)]
+    else:
+        outs = [q_block(i, nk) for i in range(nq)]
+    out = jnp.concatenate(outs, axis=1)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, cache_len, layout: HeadLayout, *,
+                  window, cap: float = 0.0) -> jax.Array:
+    """Single-token decode over a (possibly seq-sharded) KV cache.
+
+    q: [B,1,Hp,hd]; caches: [B,S,KVp,hd].  A plain masked softmax over the
+    cache: under a seq-sharded cache GSPMD partitions the reductions into
+    flash-decode-style partials + tiny all-reduces (LSE combine).
+    """
+    b, s, kvp, hd = k_cache.shape
+    k_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cur = (cache_len[:, None] if cache_len.ndim == 1 else cache_len) - 1
+    scores = _gqa_scores(q, k_cache, layout.group)       # [B,KVp,G,1,S]
+    scores = L.softcap(scores, cap)
+    d = cur[..., :, None] - k_pos[..., None, :]          # [B,1,S]; cur = query pos
+    ok = (d >= 0) & ((window < 0) | (d < window))        # d>=0 excludes empty slots
+    bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+    scores = scores + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v_cache, layout.h_pad).astype(q.dtype)
+
+
+def attend(impl: str, q, k, v, q_pos, k_pos, layout, *, causal, window,
+           cap=0.0, q_chunk=1024, kv_chunk=1024, causal_skip=False):
+    if impl == "reference":
+        return attend_reference(q, k, v, q_pos, k_pos, layout,
+                                causal=causal, window=window, cap=cap)
+    if impl == "chunked":
+        return attend_chunked(q, k, v, q_pos, k_pos, layout, causal=causal,
+                              window=window, cap=cap, q_chunk=q_chunk,
+                              kv_chunk=kv_chunk, causal_skip=causal_skip)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, q_pos, k_pos,
+                                    group=layout.group, causal=causal,
+                                    window=window, cap=cap)
+    raise ValueError(f"unknown attention impl {impl!r}")

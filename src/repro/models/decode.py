@@ -1,0 +1,302 @@
+"""Prefill and single-token decode over stacked KV / SSM caches.
+
+Decode scans layers with the per-layer cache slice as scan xs and the updated
+slice as scan ys; cache writes are per-row scatters so continuous batching
+(per-row lengths) works.  For ``long_500k`` the cache sequence dim is sharded
+over "data" and the masked softmax in ``attend_decode`` auto-partitions into
+flash-decode partials (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, dtype_of
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import kvcache as KC
+from repro.models.transformer import (
+    ModelDims, _aux_zero, _hybrid_groups, _shared_attn_block, dense_layer,
+    embed_tokens, ssm_layer, unembed,
+)
+
+
+def _split_conv(cfg: ArchConfig, conv: jax.Array):
+    d_inner, _ = S.ssm_dims(cfg)
+    n = cfg.ssm.d_state
+    return (conv[..., :d_inner], conv[..., d_inner:d_inner + n],
+            conv[..., d_inner + n:])
+
+
+def _merge_conv(parts) -> jax.Array:
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _write_kv(k_l, v_l, k_new, v_new, lengths):
+    """Per-row scatter write of one token's kv at each row's length."""
+    b = k_l.shape[0]
+    rows = jnp.arange(b)
+    k_l = k_l.at[rows, lengths].set(k_new[:, 0].astype(k_l.dtype))
+    v_l = v_l.at[rows, lengths].set(v_new[:, 0].astype(v_l.dtype))
+    return (shard(k_l, "batch", "kv_seq", "act_heads", None),
+            shard(v_l, "batch", "kv_seq", "act_heads", None))
+
+
+def _write_kv_quant(k_l, v_l, ks_l, vs_l, k_new, v_new, lengths):
+    """int8-cache variant: quantize the new token's kv per (row, head)."""
+    b = k_l.shape[0]
+    rows = jnp.arange(b)
+    kq, ks = KC.quantize_kv(k_new[:, 0])
+    vq, vs = KC.quantize_kv(v_new[:, 0])
+    k_l = k_l.at[rows, lengths].set(kq)
+    v_l = v_l.at[rows, lengths].set(vq)
+    ks_l = ks_l.at[rows, lengths].set(ks)
+    vs_l = vs_l.at[rows, lengths].set(vs)
+    return (shard(k_l, "batch", "kv_seq", "act_heads", None),
+            shard(v_l, "batch", "kv_seq", "act_heads", None),
+            shard(ks_l, "batch", "kv_seq", "act_heads"),
+            shard(vs_l, "batch", "kv_seq", "act_heads"))
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(params, cfg: ArchConfig, dims: ModelDims, tokens,
+               cache: Dict[str, Any], *, patch_embeds=None
+               ) -> Tuple[jax.Array, Dict[str, Any], Dict]:
+    """Fill the cache from a full prompt; returns last-position logits."""
+    from repro.models.transformer import decoder_stack
+    plus_one = cfg.name.startswith("gemma")
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = embed_tokens(params, cfg, dims, tokens, patch_embeds)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, aux, kv = decoder_stack(params, cfg, dims, x, positions,
+                                   collect_kv=True, plus_one=plus_one)
+        k, v = kv                                   # [L,B,s,KVp,hd]
+        if cfg.cache_quant == "int8":
+            kq, ks = KC.quantize_kv(k)
+            vq, vs = KC.quantize_kv(v)
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], kq, (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], vq, (0, 0, 0, 0, 0))
+            cache["k_scale"] = jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, 0, 0))
+            cache["v_scale"] = jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, 0, 0))
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    elif cfg.family == "ssm":
+        x, aux = _ssm_prefill(params, cfg, x, cache)
+    elif cfg.family == "hybrid":
+        x, aux = _hybrid_prefill(params, cfg, dims, x, positions, cache)
+    else:
+        raise ValueError(cfg.family)
+
+    cache["length"] = jnp.full_like(cache["length"], s)
+    cache = KC.shard_cache(cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, plus_one=plus_one)
+    logits = unembed(params, cfg, dims, x[:, -1:])
+    return logits, cache, aux
+
+
+def _ssm_prefill(params, cfg, x, cache):
+    def body(carry, p):
+        xc = carry
+        h = L.rmsnorm(p["ssm_norm"], xc, cfg.norm_eps)
+        dtype = h.dtype
+        z, xh, Bp, Cp, dt, conv_st = S._project(p["ssm"], cfg, h, dtype)
+        Aa = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+        y, h_fin = S.ssd_chunked(xh, dt, Aa, Bp, Cp, cfg.ssm.chunk)
+        out = S._finish(p["ssm"], cfg, y, xh, dt, z, dtype)
+        return xc + out, (h_fin, _merge_conv(conv_st))
+    (x), (h_all, conv_all) = jax.lax.scan(body, x, params["layers"])
+    cache["ssm"] = h_all
+    cache["conv"] = conv_all.astype(cache["conv"].dtype)
+    return x, _aux_zero(cfg)
+
+
+def _hybrid_prefill(params, cfg, dims, x, positions, cache):
+    ae, n_groups, rem = _hybrid_groups(cfg)
+
+    def body(carry, p):
+        xc = carry
+        h = L.rmsnorm(p["ssm_norm"], xc, cfg.norm_eps)
+        dtype = h.dtype
+        z, xh, Bp, Cp, dt, conv_st = S._project(p["ssm"], cfg, h, dtype)
+        Aa = -jnp.exp(p["ssm"]["A_log"].astype(jnp.float32))
+        y, h_fin = S.ssd_chunked(xh, dt, Aa, Bp, Cp, cfg.ssm.chunk)
+        out = S._finish(p["ssm"], cfg, y, xh, dt, z, dtype)
+        return xc + out, (h_fin, _merge_conv(conv_st))
+
+    h_states, conv_states, kvs = [], [], []
+    for g in range(n_groups):
+        sl = jax.tree.map(lambda a: a[g * ae:(g + 1) * ae], params["layers"])
+        x, (hs, cs) = jax.lax.scan(body, x, sl)
+        h_states.append(hs); conv_states.append(cs)
+        x, kv = _shared_attn_block(params, cfg, dims, x, positions,
+                                   collect_kv=True)
+        kvs.append(kv)
+    if rem:
+        sl = jax.tree.map(lambda a: a[n_groups * ae:], params["layers"])
+        x, (hs, cs) = jax.lax.scan(body, x, sl)
+        h_states.append(hs); conv_states.append(cs)
+
+    cache["ssm"] = jnp.concatenate(h_states, axis=0)
+    cache["conv"] = jnp.concatenate(conv_states, axis=0).astype(cache["conv"].dtype)
+    k = jnp.stack([kv[0] for kv in kvs])
+    v = jnp.stack([kv[1] for kv in kvs])
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    return x, _aux_zero(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def lm_decode(params, cfg: ArchConfig, dims: ModelDims, token,
+              cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any], Dict]:
+    """One decode step.  token: [B,1] int32.  Returns (logits, cache, aux)."""
+    plus_one = cfg.name.startswith("gemma")
+    lengths = cache["length"]                        # [B]
+    positions = lengths[:, None]
+    x = embed_tokens(params, cfg, dims, token)
+    windows = jnp.asarray(cfg.layer_windows() or [0], jnp.int32)
+    aux = _aux_zero(cfg)
+
+    quant = cfg.cache_quant == "int8"
+    if quant and cfg.family not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            "int8 KV cache is implemented for decoder-LM families")
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, xs):
+            xc, aux = carry
+            if quant:
+                p, win, k_l, v_l, ks_l, vs_l = xs
+            else:
+                p, win, k_l, v_l = xs
+            aux = dict(aux)
+            h = L.rmsnorm(p["attn_norm"], xc, cfg.norm_eps, plus_one=plus_one)
+            dt = xc.dtype
+            q, k, v = A.qkv(p["attn"], cfg.attn, dims.layout, h, positions, dt)
+            if quant:
+                k_l, v_l, ks_l, vs_l = _write_kv_quant(
+                    k_l, v_l, ks_l, vs_l, k, v, lengths)
+                k_at = KC.dequantize_kv(k_l, ks_l, dt)
+                v_at = KC.dequantize_kv(v_l, vs_l, dt)
+            else:
+                k_l, v_l = _write_kv(k_l, v_l, k, v, lengths)
+                k_at, v_at = k_l, v_l
+            ctx = A.attend_decode(q, k_at, v_at, lengths + 1, dims.layout,
+                                  window=win, cap=cfg.attn.softcap)
+            attn_out = A.out_proj(p["attn"], dims.layout, ctx, dt)
+            from repro.models.transformer import _mlp_block
+            if cfg.parallel_block:
+                # match the parallel-residual training math (one TP AR)
+                h2 = L.rmsnorm(p["mlp_norm"], xc, cfg.norm_eps,
+                               plus_one=plus_one)
+                if "moe" in p:
+                    from repro.models import moe as MO
+                    y, moe_aux = MO.moe_mlp(p["moe"], cfg, h2)
+                    for key, val in moe_aux.items():
+                        aux[key] = aux.get(key, 0) + val
+                else:
+                    y = L.mlp(p["mlp"], h2, cfg.act, dt)
+                xc = xc + (attn_out + y)
+            else:
+                xc = xc + attn_out
+                xc = _mlp_block(p, cfg, xc, plus_one=plus_one, aux=aux)
+            if quant:
+                return (xc, aux), (k_l, v_l, ks_l, vs_l)
+            return (xc, aux), (k_l, v_l)
+        if quant:
+            (x, aux), (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, (x, aux),
+                (params["layers"], windows, cache["k"], cache["v"],
+                 cache["k_scale"], cache["v_scale"]))
+            cache["k"], cache["v"] = k_new, v_new
+            cache["k_scale"], cache["v_scale"] = ks_new, vs_new
+        else:
+            (x, aux), (k_new, v_new) = jax.lax.scan(
+                body, (x, aux),
+                (params["layers"], windows, cache["k"], cache["v"]))
+            cache["k"], cache["v"] = k_new, v_new
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            xc = carry
+            p, h_l, conv_l = xs
+            h = L.rmsnorm(p["ssm_norm"], xc, cfg.norm_eps)
+            out, h_new, conv_new = S.mamba2_decode(
+                p["ssm"], cfg, h, h_l, _split_conv(cfg, conv_l))
+            return xc + out, (h_new, _merge_conv(conv_new).astype(conv_l.dtype))
+        x, (h_all, conv_all) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]))
+        cache["ssm"], cache["conv"] = h_all, conv_all
+
+    elif cfg.family == "hybrid":
+        ae, n_groups, rem = _hybrid_groups(cfg)
+
+        def body(carry, xs):
+            xc = carry
+            p, h_l, conv_l = xs
+            h = L.rmsnorm(p["ssm_norm"], xc, cfg.norm_eps)
+            out, h_new, conv_new = S.mamba2_decode(
+                p["ssm"], cfg, h, h_l, _split_conv(cfg, conv_l))
+            return xc + out, (h_new, _merge_conv(conv_new).astype(conv_l.dtype))
+
+        h_states, conv_states, k_all, v_all = [], [], [], []
+        for g in range(n_groups):
+            sl = jax.tree.map(lambda a: a[g * ae:(g + 1) * ae],
+                              params["layers"])
+            hs = cache["ssm"][g * ae:(g + 1) * ae]
+            cs = cache["conv"][g * ae:(g + 1) * ae]
+            x, (hn, cn) = jax.lax.scan(body, x, (sl, hs, cs))
+            h_states.append(hn); conv_states.append(cn)
+            k_l, v_l = cache["k"][g], cache["v"][g]
+            p_sh = params["shared_attn"]
+            hh = L.rmsnorm(p_sh["norm"], x, cfg.norm_eps)
+            q, k, v = A.qkv(p_sh["attn"], cfg.attn, dims.layout, hh,
+                            positions, x.dtype)
+            k_l, v_l = _write_kv(k_l, v_l, k, v, lengths)
+            ctx = A.attend_decode(q, k_l, v_l, lengths + 1, dims.layout,
+                                  window=jnp.int32(-1))
+            x = x + A.out_proj(p_sh["attn"], dims.layout, ctx, x.dtype)
+            hh = L.rmsnorm(p_sh["mlp_norm"], x, cfg.norm_eps)
+            x = x + L.mlp(p_sh["mlp"], hh, cfg.act, x.dtype)
+            k_all.append(k_l); v_all.append(v_l)
+        if rem:
+            sl = jax.tree.map(lambda a: a[n_groups * ae:], params["layers"])
+            hs = cache["ssm"][n_groups * ae:]
+            cs = cache["conv"][n_groups * ae:]
+            x, (hn, cn) = jax.lax.scan(body, x, (sl, hs, cs))
+            h_states.append(hn); conv_states.append(cn)
+        cache["ssm"] = jnp.concatenate(h_states, axis=0)
+        cache["conv"] = jnp.concatenate(conv_states, axis=0)
+        cache["k"] = jnp.stack(k_all)
+        cache["v"] = jnp.stack(v_all)
+    else:
+        raise ValueError(cfg.family)
+
+    cache["length"] = lengths + 1
+    cache = KC.shard_cache(cache)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, plus_one=plus_one)
+    logits = unembed(params, cfg, dims, x)
+    return logits, cache, aux

@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB:
+``input_specs()`` feeds precomputed log-mel frame embeddings, per the
+assignment).  LayerNorm + GELU + learned positions, enc self-attn (full),
+dec self-attn (causal, cached) + cross-attn (cached K/V from the encoder).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, dtype_of
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import kvcache as KC
+from repro.models.attention import HeadLayout
+from repro.models.layers import ParamSpec
+from repro.models.transformer import ModelDims, _aux_zero
+
+
+def layernorm_specs(d: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((d,), ("embed",), "ones"),
+            "bias": ParamSpec((d,), ("embed",), "zeros")}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def _xattn_specs(a, d, layout):
+    s = A.attention_specs(a, d, layout)
+    return s
+
+
+def _enc_layer_specs(cfg: ArchConfig, dims: ModelDims) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "attn_norm": layernorm_specs(d),
+        "attn": A.attention_specs(cfg.attn, d, dims.layout),
+        "mlp_norm": layernorm_specs(d),
+        "mlp": L.mlp_specs(d, cfg.d_ff, glu=False),
+    }
+
+
+def _dec_layer_specs(cfg: ArchConfig, dims: ModelDims) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "attn_norm": layernorm_specs(d),
+        "attn": A.attention_specs(cfg.attn, d, dims.layout),
+        "xattn_norm": layernorm_specs(d),
+        "xattn": _xattn_specs(cfg.attn, d, dims.layout),
+        "mlp_norm": layernorm_specs(d),
+        "mlp": L.mlp_specs(d, cfg.d_ff, glu=False),
+    }
+
+
+def encdec_specs(cfg: ArchConfig, dims: ModelDims) -> Dict[str, Any]:
+    return {
+        "embed": {"embedding": ParamSpec((dims.vocab_pad, cfg.d_model),
+                                         ("vocab", "embed"), "normal", 1.0)},
+        "dec_pos": ParamSpec((cfg.max_seq_len, cfg.d_model), (None, "embed"),
+                             "normal", 0.5),
+        "enc_pos": ParamSpec((cfg.n_frames, cfg.d_model), (None, "embed"),
+                             "normal", 0.5),
+        "enc_layers": L.stack_specs(_enc_layer_specs(cfg, dims), cfg.n_enc_layers),
+        "dec_layers": L.stack_specs(_dec_layer_specs(cfg, dims), cfg.n_layers),
+        "enc_norm": layernorm_specs(cfg.d_model),
+        "final_norm": layernorm_specs(cfg.d_model),
+    }
+
+
+def _self_attn(p, cfg, dims, x, positions, *, causal, dt):
+    q, k, v = A.qkv(p, cfg.attn, dims.layout, x, positions, dt, rope=False)
+    ctx = A.attend(cfg.attention_impl, q, k, v, positions, positions,
+                   dims.layout, causal=causal, window=jnp.int32(-1),
+                   q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    return A.out_proj(p, dims.layout, ctx, dt), (k, v)
+
+
+def encode(params, cfg: ArchConfig, dims: ModelDims, frames) -> jax.Array:
+    """frames: [B, n_frames, d_model] stub embeddings."""
+    dt = dtype_of(cfg.compute_dtype)
+    x = frames.astype(dt) + params["enc_pos"].astype(dt)[None]
+    x = shard(x, "batch", "seq", "act_embed")
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(xc, p):
+        h = layernorm(p["attn_norm"], xc)
+        y, _ = _self_attn(p["attn"], cfg, dims, h, positions, causal=False, dt=dt)
+        xc = xc + y
+        h = layernorm(p["mlp_norm"], xc)
+        return xc + L.mlp(p["mlp"], h, "gelu", dt), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layernorm(params["enc_norm"], x)
+
+
+def _cross_kv(p, cfg, dims, enc_out, dt):
+    k = A._proj(p["wk"], enc_out, ("batch", None, None, None), dt)
+    v = A._proj(p["wv"], enc_out, ("batch", None, None, None), dt)
+    if dims.layout.repeat > 1:
+        k = jnp.repeat(k, dims.layout.repeat, axis=2)
+        v = jnp.repeat(v, dims.layout.repeat, axis=2)
+    return k, v
+
+
+def _cross_attend(p, cfg, dims, x, k, v, dt):
+    q = A._proj(p["wq"], x, ("batch", "seq", "act_heads", None), dt)
+    b, sq = q.shape[:2]
+    sk = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32)[None], (b, sq))
+    k_pos = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))
+    ctx = A.attend_reference(q, k, v, q_pos, k_pos, dims.layout,
+                             causal=False, window=jnp.int32(-1))
+    return A.out_proj(p, dims.layout, ctx, dt)
+
+
+def encdec_forward(params, cfg: ArchConfig, dims: ModelDims, tokens,
+                   frames) -> Tuple[jax.Array, Dict]:
+    """Training forward: encode frames, decode full target sequence."""
+    dt = dtype_of(cfg.compute_dtype)
+    enc_out = encode(params, cfg, dims, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = L.embed_lookup(params["embed"], tokens, dt)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"].astype(dt), 0, s, 0)[None]
+    x = shard(x, "batch", "seq", "act_embed")
+
+    def body(xc, p):
+        h = layernorm(p["attn_norm"], xc)
+        y, _ = _self_attn(p["attn"], cfg, dims, h, positions, causal=True, dt=dt)
+        xc = xc + y
+        h = layernorm(p["xattn_norm"], xc)
+        k, v = _cross_kv(p["xattn"], cfg, dims, enc_out, dt)
+        xc = xc + _cross_attend(p["xattn"], cfg, dims, h, k, v, dt)
+        h = layernorm(p["mlp_norm"], xc)
+        return xc + L.mlp(p["mlp"], h, "gelu", dt), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = layernorm(params["final_norm"], x)
+    logits = x @ params["embed"]["embedding"].astype(dt).T
+    if dims.vocab_pad > cfg.vocab_size:
+        mask = jnp.arange(dims.vocab_pad) < cfg.vocab_size
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    return shard(logits, "batch", "seq", "act_vocab"), _aux_zero(cfg)
+
+
+def encdec_prefill(params, cfg: ArchConfig, dims: ModelDims, tokens, frames,
+                   cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any], Dict]:
+    """Encode + run the prompt through the decoder, filling self & cross KV."""
+    dt = dtype_of(cfg.compute_dtype)
+    enc_out = encode(params, cfg, dims, frames)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = L.embed_lookup(params["embed"], tokens, dt)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"].astype(dt), 0, s, 0)[None]
+
+    def body(xc, p):
+        h = layernorm(p["attn_norm"], xc)
+        y, kv = _self_attn(p["attn"], cfg, dims, h, positions, causal=True, dt=dt)
+        xc = xc + y
+        h = layernorm(p["xattn_norm"], xc)
+        ck, cv = _cross_kv(p["xattn"], cfg, dims, enc_out, dt)
+        xc = xc + _cross_attend(p["xattn"], cfg, dims, h, ck, cv, dt)
+        h = layernorm(p["mlp_norm"], xc)
+        return xc + L.mlp(p["mlp"], h, "gelu", dt), (kv[0], kv[1], ck, cv)
+
+    x, (k, v, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    cache["length"] = jnp.full_like(cache["length"], s)
+    x = layernorm(params["final_norm"], x[:, -1:])
+    logits = x @ params["embed"]["embedding"].astype(dt).T
+    return logits, KC.shard_cache(cache), _aux_zero(cfg)
+
+
+def encdec_decode(params, cfg: ArchConfig, dims: ModelDims, token,
+                  cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any], Dict]:
+    dt = dtype_of(cfg.compute_dtype)
+    lengths = cache["length"]
+    positions = lengths[:, None]
+    x = L.embed_lookup(params["embed"], token, dt)
+    x = x + jnp.take(params["dec_pos"].astype(dt), lengths, axis=0)[:, None, :]
+
+    def body(carry, xs):
+        xc = carry
+        p, k_l, v_l, ck_l, cv_l = xs
+        h = layernorm(p["attn_norm"], xc)
+        q, k, v = A.qkv(p["attn"], cfg.attn, dims.layout, h, positions, dt,
+                        rope=False)
+        rows = jnp.arange(k_l.shape[0])
+        k_l = k_l.at[rows, lengths].set(k[:, 0].astype(k_l.dtype))
+        v_l = v_l.at[rows, lengths].set(v[:, 0].astype(v_l.dtype))
+        ctx = A.attend_decode(q, k_l, v_l, lengths + 1, dims.layout,
+                              window=jnp.int32(-1))
+        xc = xc + A.out_proj(p["attn"], dims.layout, ctx, dt)
+        h = layernorm(p["xattn_norm"], xc)
+        xc = xc + _cross_attend(p["xattn"], cfg, dims, h, ck_l, cv_l, dt)
+        h = layernorm(p["mlp_norm"], xc)
+        xc = xc + L.mlp(p["mlp"], h, "gelu", dt)
+        return xc, (k_l, v_l)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    cache["k"], cache["v"] = k_new, v_new
+    cache["length"] = lengths + 1
+    x = layernorm(params["final_norm"], x)
+    logits = x @ params["embed"]["embedding"].astype(dt).T
+    if dims.vocab_pad > cfg.vocab_size:
+        mask = jnp.arange(dims.vocab_pad) < cfg.vocab_size
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    return logits, KC.shard_cache(cache), _aux_zero(cfg)

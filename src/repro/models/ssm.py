@@ -1,0 +1,227 @@
+"""Mamba2 (state-space duality) block: chunked SSD scan, reference recurrence,
+single-token decode.  Heads are sharded over the "model" axis (48/64 heads on
+the assigned archs — divisible by the 16-way TP axis); B/C projections are
+group-shared (1 group) and replicated.
+
+The chunked form computes intra-chunk attention-like matmuls on the MXU plus
+an inter-chunk state recurrence (lax.scan over chunks) — the TPU-native
+adaptation of the CUDA SSD kernel; the Pallas kernel in
+``repro.kernels.ssd`` implements the intra-chunk tile.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.layers import ParamSpec
+
+
+def ssm_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh = ssm_dims(cfg)
+
+    def a_init(key, shape):
+        lo, hi = s.a_init_range
+        u = jax.random.uniform(key, shape, minval=lo, maxval=hi)
+        return jnp.log(u)
+
+    return {
+        "wz": {"kernel": ParamSpec((d, d_inner), ("embed", "ssm_inner"), "scaled")},
+        "wx": {"kernel": ParamSpec((d, d_inner), ("embed", "ssm_inner"), "scaled")},
+        "wB": {"kernel": ParamSpec((d, s.d_state), ("embed", None), "scaled")},
+        "wC": {"kernel": ParamSpec((d, s.d_state), ("embed", None), "scaled")},
+        "wdt": {"kernel": ParamSpec((d, nh), ("embed", "heads"), "scaled")},
+        "dt_bias": ParamSpec((nh,), ("heads",), "zeros"),
+        "A_log": ParamSpec((nh,), ("heads",), init_fn=a_init),
+        "D": ParamSpec((nh,), ("heads",), "ones"),
+        "conv_x": ParamSpec((s.d_conv, d_inner), (None, "ssm_inner"), "scaled"),
+        "conv_B": ParamSpec((s.d_conv, s.d_state), (None, None), "scaled"),
+        "conv_C": ParamSpec((s.d_conv, s.d_state), (None, None), "scaled"),
+        "norm": L.rmsnorm_specs(d_inner),
+        "wo": {"kernel": ParamSpec((d_inner, d), ("ssm_inner", "embed"), "scaled")},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv via shifted adds.  x: [B,S,C], w: [K,C].
+
+    Returns (y, new_state) where state is the trailing K-1 inputs (decode).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y), new_state
+
+
+def _project(params, cfg, x, dtype, conv_state=None):
+    s = cfg.ssm
+    d_inner, nh = ssm_dims(cfg)
+    z = L.dense(params["wz"], x, dtype)
+    xin = L.dense(params["wx"], x, dtype)
+    Bp = L.dense(params["wB"], x, dtype)
+    Cp = L.dense(params["wC"], x, dtype)
+    dt = L.dense(params["wdt"], x, jnp.float32)
+    if conv_state is None:
+        xin, st_x = _causal_conv(xin, params["conv_x"].astype(dtype))
+        Bp, st_B = _causal_conv(Bp, params["conv_B"].astype(dtype))
+        Cp, st_C = _causal_conv(Cp, params["conv_C"].astype(dtype))
+    else:
+        cx, cB, cC = conv_state
+        xin, st_x = _causal_conv(xin, params["conv_x"].astype(dtype), cx)
+        Bp, st_B = _causal_conv(Bp, params["conv_B"].astype(dtype), cB)
+        Cp, st_C = _causal_conv(Cp, params["conv_C"].astype(dtype), cC)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))
+    xin = shard(xin.reshape(*xin.shape[:-1], nh, s.head_dim),
+                "batch", "seq", "act_heads", None)
+    return z, xin, Bp, Cp, dt, (st_x, st_B, st_C)
+
+
+def _finish(params, cfg, y, xh, dt_unused, z, dtype):
+    d_inner, nh = ssm_dims(cfg)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:-2], d_inner).astype(dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(params["norm"], y, cfg.norm_eps)
+    return shard(L.dense(params["wo"], y, dtype), "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(xh, dt, A, Bp, Cp, chunk: int,
+                h0: Optional[jax.Array] = None):
+    """Chunked SSD.  xh: [B,S,nh,hp]; dt: [B,S,nh] (f32); A: [nh] (<0);
+    Bp/Cp: [B,S,N].  Returns (y [B,S,nh,hp] f32, h_final [B,nh,hp,N] f32)."""
+    b, s, nh, hp = xh.shape
+    n = Bp.shape[-1]
+    q = min(chunk, s)
+    nchunk = -(-s // q)
+    pad = nchunk * q - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bp, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(Cp, ((0, 0), (0, pad), (0, 0)))
+
+    xf = xh.astype(jnp.float32).reshape(b, nchunk, q, nh, hp)
+    dtc = dt.reshape(b, nchunk, q, nh)
+    Bc = Bp.astype(jnp.float32).reshape(b, nchunk, q, n)
+    Cc = Cp.astype(jnp.float32).reshape(b, nchunk, q, n)
+    la = dtc * A[None, None, None, :]                  # log decay per step
+    cum = jnp.cumsum(la, axis=2)                       # [b,c,q,nh]
+
+    def chunk_step(h, xs):
+        xq, dq, bq, cq, cumq = xs                      # per-chunk slices
+        xdtq = xq * dq[..., None]                      # [b,q,nh,hp]
+        # intra-chunk: masked decay kernel L[t,s] = exp(cum_t - cum_s), t>=s
+        rel = cumq[:, :, None, :] - cumq[:, None, :, :]            # [b,q,q,nh]
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: exp of the (large-positive) masked upper triangle
+        # would poison gradients through jnp.where.
+        rel = jnp.where(tri[None, :, :, None], rel, -jnp.inf)
+        Lk = jnp.exp(rel)
+        cb = jnp.einsum("btn,bsn->bts", cq, bq)                    # [b,q,q]
+        y_intra = jnp.einsum("btsh,bts,bshp->bthp", Lk, cb, xdtq)
+        # inter-chunk contribution from incoming state
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", cq, h,
+                             jnp.exp(cumq))
+        # state update: S_c = sum_s exp(cum_last - cum_s) B_s xdt_s
+        decay_out = jnp.exp(cumq[:, -1:, :] - cumq)                # [b,q,nh]
+        s_new = jnp.einsum("bsn,bsh,bshp->bhpn", bq, decay_out, xdtq)
+        h = jnp.exp(cumq[:, -1])[:, :, None, None] * h + s_new
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((b, nh, hp, n), jnp.float32) if h0 is None else h0
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0),
+          jnp.moveaxis(cum, 1, 0))
+    h_fin, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nchunk * q, nh, hp)
+    return y[:, :s], h_fin
+
+
+def ssd_reference(xh, dt, A, Bp, Cp):
+    """Step-by-step recurrence oracle (f32)."""
+    b, s, nh, hp = xh.shape
+    n = Bp.shape[-1]
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs
+        a = jnp.exp(dtt * A[None])                         # [b,nh]
+        dx = xt * dtt[..., None]                           # [b,nh,hp]
+        h = a[..., None, None] * h + jnp.einsum("bhp,bn->bhpn", dx, bt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, hp, n), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bp.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cp.astype(jnp.float32), 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin
+
+
+# ---------------------------------------------------------------------------
+# Block-level entry points
+# ---------------------------------------------------------------------------
+
+
+def mamba2_block(params, cfg: ArchConfig, x: jax.Array, *,
+                 impl: Optional[str] = None) -> jax.Array:
+    """Full-sequence forward.  x: [B,S,d] -> [B,S,d]."""
+    dtype = x.dtype
+    s = cfg.ssm
+    z, xh, Bp, Cp, dt, _ = _project(params, cfg, x, dtype)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    impl = impl or cfg.ssm_impl
+    if impl == "reference":
+        y, _ = ssd_reference(xh, dt, A, Bp, Cp)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd(xh, dt, A, Bp, Cp, chunk=s.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bp, Cp, s.chunk)
+    return _finish(params, cfg, y, xh, dt, z, dtype)
+
+
+def mamba2_decode(params, cfg: ArchConfig, x: jax.Array,
+                  ssm_state: jax.Array, conv_state: Tuple[jax.Array, ...]
+                  ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
+    """Single-token decode.  x: [B,1,d]; ssm_state: [B,nh,hp,N] (f32)."""
+    dtype = x.dtype
+    z, xh, Bp, Cp, dt, new_conv = _project(params, cfg, x, dtype, conv_state)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A[None])                        # [B,nh]
+    dx = xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+    h = (a[..., None, None] * ssm_state
+         + jnp.einsum("bhp,bn->bhpn", dx, Bp[:, 0].astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cp[:, 0].astype(jnp.float32))[:, None]
+    out = _finish(params, cfg, y, xh, dt, z, dtype)
+    return out, h, new_conv
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    d_inner, _ = ssm_dims(cfg)
+    return d_inner + 2 * cfg.ssm.d_state

@@ -1,0 +1,91 @@
+"""AdamW with bf16 params + f32 master copy & moments (production layout:
+master/m/v are FSDP×TP sharded exactly like the params, so per-chip optimizer
+memory is params_bytes*12/n_chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    use_master: bool = True      # keep f32 master when params are bf16
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    master: Any                  # f32 copy (or None-like empty dict)
+
+
+def init_opt_state(params, cfg: AdamWConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if cfg.use_master else jax.tree.map(lambda p: jnp.zeros((0,)), params))
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                    master)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, state: OptState, cfg: AdamWConfig,
+                 lr: jax.Array) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads32, gnorm = clip_by_global_norm(grads32, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads32)
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads32)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads32)
+
+    def upd(p_master, m, v):
+        mh = m / b1c
+        vh = v / b2c
+        return p_master - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                + cfg.weight_decay * p_master)
+
+    if cfg.use_master:
+        master = jax.tree.map(upd, state.master, mu, nu)
+        new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype),
+                                  master, params)
+    else:
+        master = state.master
+        new_params = jax.tree.map(
+            lambda p, m, v: upd(p.astype(jnp.float32), m, v).astype(p.dtype),
+            params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, mu, nu, master), metrics
+
+
+def opt_state_axes(param_axes, cfg: AdamWConfig):
+    """Logical axes for the optimizer state (mirrors param sharding)."""
+    empty = jax.tree.map(lambda a: a if cfg.use_master else (None,), param_axes)
+    return OptState((), param_axes, param_axes, empty)

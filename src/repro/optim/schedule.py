@@ -1,0 +1,22 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total: int,
+                         final_frac: float = 0.1) -> Callable:
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = lr * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(s < warmup, warm, lr * cos)
+    return f
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)

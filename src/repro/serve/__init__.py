@@ -1,0 +1,2 @@
+from repro.serve.engine import Request, ServeEngine, SyntheticRequests  # noqa: F401
+from repro.serve.sampler import greedy, sample  # noqa: F401

@@ -1,0 +1,214 @@
+"""Serving engine: continuous batching over a fixed-shape decode batch.
+
+Requests prefill into a single-row cache (fixed prefill length, padded) and
+are inserted into a free decode slot; every engine iteration decodes the full
+batch (inactive slots masked).  The engine is a *profiled program*: prefill
+and decode iterations emit different hook streams (merged BlockTable), so
+serving intervals genuinely vary in composition — the serving analogue of the
+paper's multi-phase workloads.  ``snapshot()``/``restore()`` capture engine
+state for replay resets and elastic migration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.blocks_lm import build_block_table
+from repro.core.intervals import IntervalBuilder, Profile
+from repro.core.registry import BlockTable, merge_tables
+from repro.models.model_zoo import Model, build_model
+from repro.serve.sampler import greedy, sample
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # [P] int32
+    max_new_tokens: int
+    submitted_at: float = 0.0
+    output: Optional[List[int]] = None
+    finished_at: float = 0.0
+
+
+class SyntheticRequests:
+    """Deterministic request stream (stateless in arrival index)."""
+
+    def __init__(self, vocab: int, *, prompt_len: int = 32,
+                 mean_new: int = 24, seed: int = 0):
+        self.vocab, self.prompt_len, self.mean_new, self.seed = \
+            vocab, prompt_len, mean_new, seed
+
+    def request(self, i: int) -> Request:
+        rng = np.random.default_rng(np.random.SeedSequence([self.seed, i]))
+        p = rng.integers(0, self.vocab, size=self.prompt_len).astype(np.int32)
+        n = int(rng.integers(self.mean_new // 2, self.mean_new * 2))
+        return Request(i, p, n)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, *, batch: int = 4, max_seq: int = 128,
+                 prefill_len: int = 32, seed: int = 0,
+                 temperature: float = 0.0, instrument: bool = True,
+                 interval_steps: float = 4.0):
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.batch, self.max_seq, self.prefill_len = batch, max_seq, prefill_len
+        self.temperature = temperature
+        self.rng = jax.random.PRNGKey(seed)
+
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+
+        self.table: Optional[BlockTable] = None
+        self.builder: Optional[IntervalBuilder] = None
+        if instrument:
+            # FLOP-weighted unit of work: serving steps are heterogeneous in
+            # tensor volume (prefill vs decode), see build_block_table docs
+            tp = build_block_table(
+                self.model, ShapeConfig("p", "prefill", prefill_len, 1),
+                train=False, unit="flops")
+            td = build_block_table(
+                self.model, ShapeConfig("d", "decode", max_seq, batch),
+                train=False, unit="flops")
+            self.table = merge_tables({"prefill": tp, "decode": td})
+            iu = interval_steps * self.table.step_uow("decode")
+            self.builder = IntervalBuilder(self.table, iu)
+
+        self.reset()
+
+    # ------------------------------------------------------------------
+    def reset(self):
+        self.cache = self.model.init_cache(self.batch, self.max_seq)
+        self.active = np.zeros(self.batch, bool)
+        self.remaining = np.zeros(self.batch, np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * self.batch
+        self.last_token = jnp.zeros((self.batch, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.iterations = 0
+        self.kinds_log: List[str] = []
+
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _insert(self, slot: int, req: Request):
+        p = np.zeros(self.prefill_len, np.int32)
+        n = min(len(req.prompt), self.prefill_len)
+        p[:n] = req.prompt[:n]
+        batch = {"tokens": jnp.asarray(p)[None]}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((1, self.cfg.n_frames,
+                                         self.cfg.d_model), jnp.float32)
+        if self.cfg.n_patches:
+            batch["patches"] = jnp.zeros((1, self.cfg.n_patches,
+                                          self.cfg.d_model), jnp.float32)
+        pre_cache = self.model.init_cache(1, self.max_seq)
+        logits, pre_cache, _ = self._prefill(self.model_params, batch,
+                                             pre_cache)
+        # copy row 0 of the single-row cache into the decode slot
+        def put(dst, src, key):
+            if key == "length":
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0])
+        self.cache = {k: put(self.cache[k], pre_cache[k], k)
+                      for k in self.cache}
+        tok = greedy(logits)
+        self.last_token = self.last_token.at[slot].set(tok[0])
+        self.active[slot] = True
+        self.remaining[slot] = req.max_new_tokens
+        req.output = [int(tok[0, 0])]
+        self.slot_req[slot] = req
+        if self.builder is not None:
+            self.builder.add_step(kind="prefill")
+        self.kinds_log.append("prefill")
+        self.iterations += 1
+
+    def _decode_all(self):
+        self.rng, sub = jax.random.split(self.rng)
+        logits, self.cache, _ = self._decode(self.model_params,
+                                             self.last_token, self.cache)
+        if self.temperature > 0:
+            tok = sample(logits, sub, temperature=self.temperature)
+        else:
+            tok = greedy(logits)
+        self.last_token = tok
+        toks = np.asarray(tok)[:, 0]
+        for b in range(self.batch):
+            if not self.active[b]:
+                continue
+            req = self.slot_req[b]
+            req.output.append(int(toks[b]))
+            self.remaining[b] -= 1
+            if (self.remaining[b] <= 0
+                    or int(self.cache["length"][b]) >= self.max_seq - 1):
+                req.finished_at = time.perf_counter()
+                self.done.append(req)
+                self.active[b] = False
+                self.slot_req[b] = None
+        if self.builder is not None:
+            self.builder.add_step(kind="decode")
+        self.kinds_log.append("decode")
+        self.iterations += 1
+
+    # ------------------------------------------------------------------
+    def step(self, params) -> bool:
+        """One engine iteration.  Returns False when idle."""
+        self.model_params = params
+        free = [b for b in range(self.batch) if not self.active[b]]
+        if free and self.queue:
+            self._insert(free[0], self.queue.pop(0))
+            return True
+        if self.active.any():
+            self._decode_all()
+            return True
+        return False
+
+    def run(self, params, requests: List[Request]) -> Dict[str, float]:
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self.step(params):
+            pass
+        jax.block_until_ready(self.last_token)
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.output or []) for r in self.done)
+        lat = [r.finished_at - r.submitted_at for r in self.done
+               if r.finished_at]
+        return {
+            "wall_s": wall,
+            "tokens": toks,
+            "tokens_per_s": toks / max(wall, 1e-9),
+            "requests": len(self.done),
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "iterations": self.iterations,
+        }
+
+    # ------------------------------------------------------------------
+    def profile(self) -> Profile:
+        assert self.builder is not None
+        return self.builder.finalize()
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Host-memory engine state (elastic migration / replay resets)."""
+        return {
+            "cache": jax.tree.map(np.asarray, self.cache),
+            "active": self.active.copy(),
+            "remaining": self.remaining.copy(),
+            "last_token": np.asarray(self.last_token),
+            "iterations": self.iterations,
+        }
+
+    def restore(self, snap: Dict[str, Any]):
+        self.cache = jax.tree.map(jnp.asarray, snap["cache"])
+        self.active = snap["active"].copy()
+        self.remaining = snap["remaining"].copy()
+        self.last_token = jnp.asarray(snap["last_token"])
+        self.iterations = snap["iterations"]

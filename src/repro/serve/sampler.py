@@ -1,0 +1,23 @@
+"""Token samplers for decoding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits: [B,1,V] -> [B,1] int32."""
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    lf = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    lf = lf / temperature
+    if top_k > 0:
+        kth = jnp.sort(lf, axis=-1)[:, -top_k][:, None]
+        lf = jnp.where(lf < kth, -jnp.inf, lf)
+    tok = jax.random.categorical(rng, lf, axis=-1)
+    return tok[:, None].astype(jnp.int32)

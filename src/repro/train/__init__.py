@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, init_train_state, make_train_step  # noqa: F401
+from repro.train.trainer import Trainer, WatchdogReport  # noqa: F401

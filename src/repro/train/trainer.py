@@ -1,0 +1,187 @@
+"""Instrumented trainer: the paper's "interval analysis executable" is this
+loop with profiling on (DESIGN.md §3).  Features:
+
+- WorkMeter hooks inside the jit'd step + host-side IntervalBuilder
+  (per-step dynamic signature entries from the loss aux),
+- microbatch gradient accumulation, donated buffers,
+- atomic async checkpointing + exact resume (stateless data cursor),
+- step watchdog: straggler detection/logging (slow-step quarantine list),
+- replay support: ``make_runner()`` exposes the run as a StepRunner so
+  ReplayEngine can validate nuggets on this platform.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.blocks_lm import build_block_table
+from repro.core.intervals import IntervalBuilder, Profile
+from repro.core.meter import read_meter
+from repro.core.registry import BlockTable
+from repro.core.replay import SimpleRunner
+from repro.models.model_zoo import Model, build_model
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import constant
+from repro.train.state import TrainState, init_train_state, make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass
+class WatchdogReport:
+    slow_steps: List[int]
+    step_times: List[float]
+
+    def straggler_fraction(self) -> float:
+        return len(self.slow_steps) / max(len(self.step_times), 1)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, *, shape: Optional[ShapeConfig] = None,
+                 seq_len: int = 128, batch: int = 4,
+                 opt: Optional[AdamWConfig] = None,
+                 lr_fn: Optional[Callable] = None,
+                 data=None, seed: int = 0,
+                 instrument: bool = True,
+                 interval_steps: float = 2.0,
+                 microbatch: int = 1,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 keep_n: int = 3,
+                 straggler_factor: float = 3.0,
+                 donate: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.shape = shape or ShapeConfig("adhoc_train", "train", seq_len, batch)
+        self.opt_cfg = opt or AdamWConfig()
+        self.lr_fn = lr_fn or constant(self.opt_cfg.lr)
+        self.seed = seed
+        self.instrument = instrument
+        self.microbatch = microbatch
+        self.straggler_factor = straggler_factor
+
+        if data is None:
+            from repro.data.synthetic import SyntheticCorpus
+            data = SyntheticCorpus(
+                cfg.vocab_size, self.shape.seq_len, self.shape.global_batch,
+                seed=seed,
+                n_frames=cfg.n_frames if cfg.family == "encdec" else 0,
+                d_model=cfg.d_model, n_patches=cfg.n_patches)
+        self.data = data
+
+        self.table: Optional[BlockTable] = (
+            build_block_table(self.model, self.shape) if instrument else None)
+        self.interval_uow = (interval_steps * self.table.step_uow()
+                             if self.table else 0.0)
+        self.builder = (IntervalBuilder(self.table, self.interval_uow)
+                        if self.table else None)
+
+        step_fn = make_train_step(self.model, self.opt_cfg, self.lr_fn,
+                                  table=self.table, microbatch=microbatch,
+                                  instrument=instrument)
+        self._step_fn = (jax.jit(step_fn, donate_argnums=(0,)) if donate
+                         else jax.jit(step_fn))
+        self._uninstrumented = jax.jit(
+            make_train_step(self.model, self.opt_cfg, self.lr_fn,
+                            table=None, microbatch=microbatch,
+                            instrument=False),
+            donate_argnums=(0,))
+
+        self.ckpt = (Checkpointer(ckpt_dir, keep_n=keep_n)
+                     if ckpt_dir else None)
+        self.ckpt_every = ckpt_every
+        self.step_times: List[float] = []
+        self.slow_steps: List[int] = []
+        self.metrics_history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self) -> TrainState:
+        return init_train_state(self.model, jax.random.PRNGKey(self.seed),
+                                self.opt_cfg, self.table)
+
+    def _device_batch(self, step: int) -> Dict[str, jax.Array]:
+        b = self.data.batch_at(step)
+        return {k: jnp.asarray(v) for k, v in b.items() if k != "domains"}
+
+    def run(self, n_steps: int, *, state: Optional[TrainState] = None,
+            resume: bool = True, log_every: int = 0) -> TrainState:
+        if state is None:
+            state = self.init_state()
+            if resume and self.ckpt is not None:
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    state, extra = self.ckpt.restore(state)
+                    log.info("resumed from step %s", latest)
+        start = int(state.step)
+        for s in range(start, n_steps):
+            batch = self._device_batch(s)
+            t0 = time.perf_counter()
+            state, metrics, aux = self._step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._post_step(s, dt, metrics, aux)
+            if (self.ckpt is not None and self.ckpt_every
+                    and (s + 1) % self.ckpt_every == 0):
+                self.ckpt.save(s + 1, state)
+            if log_every and (s + 1) % log_every == 0:
+                log.info("step %d loss %.4f (%.0f ms)", s + 1,
+                         float(metrics["loss"]), dt * 1e3)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return state
+
+    def _post_step(self, step: int, dt: float, metrics, aux) -> None:
+        self.step_times.append(dt)
+        med = float(np.median(self.step_times[-50:]))
+        if len(self.step_times) > 5 and dt > self.straggler_factor * med:
+            self.slow_steps.append(step)
+            log.warning("straggler: step %d took %.0f ms (median %.0f ms)",
+                        step, dt * 1e3, med * 1e3)
+        self.metrics_history.append(
+            {k: float(v) for k, v in metrics.items()})
+        if self.builder is not None:
+            dyn = {}
+            for k in ("expert_tokens", "dropped_tokens"):
+                if k in aux:
+                    dyn[k] = np.asarray(aux[k])
+            self.builder.add_step(dyn or None)
+
+    # ------------------------------------------------------------------
+    def profile(self) -> Profile:
+        assert self.builder is not None, "instrumentation disabled"
+        return self.builder.finalize()
+
+    def watchdog_report(self) -> WatchdogReport:
+        return WatchdogReport(self.slow_steps, self.step_times)
+
+    # ------------------------------------------------------------------
+    def make_runner(self, *, instrument: bool = False) -> SimpleRunner:
+        """StepRunner for ReplayEngine: reset() re-inits (or restores) at a
+        step; run_step() executes one deterministic step (stateless data)."""
+        step_fn = self._step_fn if instrument else self._uninstrumented
+
+        def reset(step: int) -> TrainState:
+            state = self.init_state()
+            if step > 0 and self.ckpt is not None:
+                steps = [s for s in self.ckpt.all_steps() if s <= step]
+                if steps:
+                    state, _ = self.ckpt.restore(state, steps[-1])
+            return state
+
+        def run(state: TrainState, step: int) -> TrainState:
+            # fast-forward gap (checkpoint granularity) executes real steps
+            batch = self._device_batch(step)
+            state, _, _ = step_fn(state, batch)
+            return state
+
+        def sync(state: TrainState) -> None:
+            jax.block_until_ready(state.params)
+
+        return SimpleRunner(reset, run, sync)

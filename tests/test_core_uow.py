@@ -1,0 +1,108 @@
+"""Unit-of-work walker + WorkMeter unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.meter import _add64, init_meter, meter_value, tick_step
+from repro.core.registry import BlockDef, BlockTable, Segment
+from repro.core.unit_of_work import jaxpr_cost, trace_cost
+
+
+def test_scan_multiplies_cost():
+    def body_once(x):
+        return jnp.sin(x) * 2 + 1
+
+    def scanned(x):
+        def b(c, _):
+            return jnp.sin(c) * 2 + 1, None
+        c, _ = jax.lax.scan(b, x, None, length=7)
+        return c
+
+    c1 = trace_cost(body_once, jnp.ones(4))
+    c7 = trace_cost(scanned, jnp.ones(4))
+    # scan cost ≈ 7 × body + the scan op itself
+    assert c7.ops >= 7 * c1.ops
+    assert c7.ops <= 7 * (c1.ops + 3) + 2
+
+
+def test_dot_flops():
+    def f(a, b):
+        return a @ b
+    c = trace_cost(f, jnp.ones((8, 16)), jnp.ones((16, 4)))
+    assert c.flops == pytest.approx(2 * 8 * 16 * 4)
+
+
+def test_cond_counts_mean_of_branches():
+    def f(x):
+        return jax.lax.cond(x.sum() > 0,
+                            lambda v: v * 2 + 1,
+                            lambda v: v, x)
+    c = trace_cost(f, jnp.ones(3))
+    assert c.ops > 0
+
+
+def test_while_flags_unbounded():
+    def f(x):
+        return jax.lax.while_loop(lambda v: v[0] < 10, lambda v: v + 1, x)
+    c = trace_cost(f, jnp.zeros(2))
+    assert c.unbounded_loops >= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(0, 2**40), b=st.integers(0, 2**31 - 1))
+def test_add64_two_limb(a, b):
+    lo = jnp.uint32(a & 0xFFFFFFFF)
+    hi = jnp.uint32(a >> 32)
+    nlo, nhi = _add64(lo, hi, b)
+    assert (int(nhi) << 32 | int(nlo)) == a + b
+
+
+def test_meter_accumulates_and_overflows_32bit():
+    t = BlockTable([BlockDef("x", float(2**30))], [Segment((0,), 8)])
+    m = init_meter(t)
+    for _ in range(3):
+        m = tick_step(m, t)
+    assert meter_value(m) == 3 * 8 * 2**30     # > 2**32: needs limb carry
+    assert int(m["counts"][0]) == 24
+
+
+def test_meter_dynamic_counts():
+    t = BlockTable([BlockDef("x", 5.0),
+                    BlockDef("e0", 0.0, virtual=True,
+                             dyn_key="expert_tokens", dyn_index=0),
+                    BlockDef("e1", 0.0, virtual=True,
+                             dyn_key="expert_tokens", dyn_index=1)],
+                   [Segment((0,), 2)])
+    m = init_meter(t)
+    m = tick_step(m, t, {"expert_tokens": jnp.asarray([10, 3])})
+    assert int(m["counts"][1]) == 10
+    assert int(m["counts"][2]) == 3
+
+
+def test_hlo_analysis_histogram_and_collectives():
+    from repro.core.hlo_analysis import (collective_stats, op_histogram,
+                                         parse_defs)
+    hlo = """
+HloModule test
+fused {
+  %a.1 = f32[8,16] parameter(0)
+  %b = f32[8,16] add(%a.1, %a.1)
+  ROOT %c = f32[8,16] multiply(%b, %a.1)
+}
+ENTRY main {
+  %p0 = f32[8,16] parameter(0)
+  %ar = f32[8,16] all-reduce(%p0), replica_groups={}
+  %ag = f32[32,16] all-gather(%ar), dimensions={0}
+  ROOT %f = f32[8,16] fusion(%ag), kind=kLoop, calls=%fused
+}
+"""
+    hist = op_histogram(hlo)
+    assert hist["add"] == 1 and hist["all-reduce"] == 1
+    sizes = parse_defs(hlo)
+    assert sizes["p0"] == 8 * 16 * 4
+    st_ = collective_stats(hlo)
+    assert st_["all-reduce"]["count"] == 1
+    assert st_["all-reduce"]["bytes"] == 8 * 16 * 4
+    assert st_["all-gather"]["bytes"] == 8 * 16 * 4   # operand, not result

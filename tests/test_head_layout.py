@@ -1,0 +1,54 @@
+"""HeadLayout padding properties (hypothesis): the padded-slot layout must
+keep the assigned arch's math exact for ANY (heads, kv, tp) combination."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AttnConfig
+from repro.models.attention import HeadLayout
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    kv=st.integers(1, 16),
+    group=st.integers(1, 8),
+    tp=st.sampled_from([1, 2, 4, 8, 16]),
+)
+def test_head_layout_invariants(kv, group, tp):
+    h = kv * group
+    a = AttnConfig(n_heads=h, n_kv_heads=kv, head_dim=64)
+    lo = HeadLayout.make(a, tp)
+    # divisibility for the mesh
+    assert lo.h_pad % tp == 0
+    assert lo.kv_pad % tp == 0 or lo.kv_pad == kv
+    assert lo.h_pad % lo.kv_pad == 0
+    # no real head lost
+    assert lo.h_pad >= h and lo.kv_pad >= kv
+    assert lo.kv_pad == kv * lo.repeat
+    # the mask keeps exactly the real heads
+    mask = lo.head_mask()
+    assert mask.sum() == h
+    # every real kv head serves exactly h/kv real q slots
+    g_real = lo.h_pad // kv
+    per_group = mask.reshape(kv, g_real).sum(axis=1)
+    assert (per_group == h // kv).all()
+    # q slot -> kv slot -> real kv head mapping is consistent
+    s = np.arange(lo.h_pad)
+    kv_slot = s // lo.group
+    real_kv = kv_slot // lo.repeat
+    assert (real_kv == s // g_real).all()
+
+
+def test_assigned_archs_exact_layouts():
+    # the five nontrivial cases on the 16-way production TP axis
+    cases = {
+        (40, 8): (48, 16, 2),     # llama4 / qwen2.5
+        (96, 8): (96, 16, 2),     # mistral
+        (64, 8): (64, 16, 2),     # internvl
+        (16, 8): (16, 16, 2),     # qwen3
+        (8, 4): (16, 16, 4),      # gemma3
+    }
+    for (h, kv), (hp, kvp, rep) in cases.items():
+        lo = HeadLayout.make(AttnConfig(h, kv, 128), 16)
+        assert (lo.h_pad, lo.kv_pad, lo.repeat) == (hp, kvp, rep), (h, kv, lo)
+        assert lo.head_mask().sum() == h

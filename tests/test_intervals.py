@@ -1,0 +1,125 @@
+"""Property tests (hypothesis) for the core Nugget machinery: interval
+invariants, marker semantics, low-overhead marker search."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.intervals import IntervalBuilder
+from repro.core.markers import low_overhead_marker, plan_markers
+from repro.core.registry import BlockDef, BlockTable, Segment
+
+
+def make_table(costs, layers=3):
+    blocks = [BlockDef(f"b{i}", float(c)) for i, c in enumerate(costs)]
+    prog = [Segment(tuple(range(len(costs))), layers)]
+    return BlockTable(blocks, prog)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    costs=st.lists(st.integers(1, 50), min_size=2, max_size=6),
+    layers=st.integers(1, 5),
+    n_steps=st.integers(1, 30),
+    ivl_frac=st.floats(0.3, 4.0),
+)
+def test_interval_invariants(costs, layers, n_steps, ivl_frac):
+    table = make_table(costs, layers)
+    step_uow = table.step_uow()
+    b = IntervalBuilder(table, max(1.0, ivl_frac * step_uow))
+    for _ in range(n_steps):
+        b.add_step()
+    prof = b.finalize()
+
+    # 1) total uow == steps × step_uow
+    assert prof.total_uow == pytest.approx(n_steps * step_uow)
+    # 2) intervals tile the uow axis without gaps
+    prev = 0.0
+    for iv in prof.intervals:
+        assert iv.start_uow == pytest.approx(prev)
+        assert iv.end_uow > iv.start_uow
+        prev = iv.end_uow
+    # 3) interval widths: bounded above by I + one hook; the mean tracks I
+    # (fp jitter at exact boundary multiples can shrink individual
+    # intervals, so no strict per-interval lower bound)
+    widths = [iv.end_uow - iv.start_uow for iv in prof.intervals]
+    for w in widths:
+        assert w <= prof.interval_uow + max(costs) + 1e-6
+    if len(widths) >= 3:
+        mean_w = sum(widths) / len(widths)
+        assert mean_w >= prof.interval_uow - max(costs) - 1e-6
+    # 4) sum of interval BBVs == executions in covered region
+    if prof.intervals:
+        total_bbv = np.sum([iv.bbv for iv in prof.intervals], axis=0)
+        covered = prof.intervals[-1].end_uow
+        # count hook stream executions up to covered uow
+        ids, cum = table.expand()
+        full = np.concatenate([ids] * n_steps)
+        cums = np.concatenate([cum + i * step_uow for i in range(n_steps)])
+        j = np.searchsorted(cums, covered - 1e-9, side="left") + 1
+        want = np.zeros(table.n_blocks)
+        np.add.at(want, full[:j], 1)
+        np.testing.assert_allclose(total_bbv, want)
+    # 5) end markers: cumulative-hit counts are non-decreasing per block
+    seen = {}
+    for iv in prof.intervals:
+        m = iv.end_marker
+        assert m.hits >= seen.get(m.block, 0)
+        seen[m.block] = m.hits
+    # 6) marker uow equals interval end
+    for iv in prof.intervals:
+        assert iv.end_marker.uow == pytest.approx(iv.end_uow)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    costs=st.lists(st.integers(1, 40), min_size=3, max_size=6),
+    dist_frac=st.floats(0.05, 1.0),
+)
+def test_low_overhead_marker_properties(costs, dist_frac):
+    table = make_table(costs, layers=4)
+    b = IntervalBuilder(table, 2.5 * table.step_uow())
+    for _ in range(12):
+        b.add_step()
+    prof = b.finalize()
+    if not prof.intervals:
+        return
+    dist = dist_frac * table.step_uow()
+    for idx in range(min(3, prof.n_intervals)):
+        iv = prof.intervals[idx]
+        m = low_overhead_marker(prof, idx, dist)
+        # within the search distance of the interval end
+        assert iv.end_uow - m.uow <= dist + 1e-9
+        # frequency no higher than the true end block's frequency
+        assert iv.bbv[m.block] <= iv.bbv[iv.end_marker.block] + 1e-9 or \
+            m.block == iv.end_marker.block
+
+
+def test_heterogeneous_step_kinds():
+    """Serving-style mixed streams: intervals still tile the uow axis."""
+    blocks = [BlockDef("p", 10.0), BlockDef("d", 3.0)]
+    t = BlockTable(blocks, [Segment((0,), 2)],
+                   {"prefill": [Segment((0,), 2)],
+                    "decode": [Segment((1,), 4)]})
+    b = IntervalBuilder(t, 15.0)
+    kinds = ["prefill", "decode", "decode", "prefill", "decode"]
+    for k in kinds:
+        b.add_step(kind=k)
+    prof = b.finalize()
+    total = 2 * 20.0 + 3 * 12.0
+    assert prof.total_uow == pytest.approx(total)
+    prev = 0.0
+    for iv in prof.intervals:
+        assert iv.start_uow == pytest.approx(prev)
+        prev = iv.end_uow
+
+
+def test_marker_plan_warmup():
+    table = make_table([5, 7], layers=2)
+    b = IntervalBuilder(table, 1.5 * table.step_uow())
+    for _ in range(10):
+        b.add_step()
+    prof = b.finalize()
+    plan = plan_markers(prof, 3, warmup_intervals=2)
+    assert plan.warmup_start is not None
+    assert plan.warmup_start.uow <= prof.intervals[3].start_uow
+    assert 0 <= plan.hook_fraction <= 1

@@ -1,0 +1,119 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (assignment
+requirement: assert_allclose against ref.py for every Pallas kernel)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (1, 64, 2, 1, 16),
+    (2, 96, 4, 2, 32),
+    (1, 128, 8, 8, 64),
+    (2, 40, 6, 2, 16),          # non-multiple-of-block seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, KV, hd, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    out = ops.flash_attention(q, k, v, group=H // KV, causal=causal,
+                              bq=32, bk=32)
+    want = ref.flash_attention_ref(q, k, v, group=H // KV, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [8, 24])
+def test_flash_attention_window(window):
+    ks = jax.random.split(KEY, 3)
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = ops.flash_attention(q, k, v, group=2, causal=True, window=window,
+                              bq=16, bk=16)
+    want = ref.flash_attention_ref(q, k, v, group=2, causal=True,
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(KEY, 3)
+    B, S, H, KV, hd = 1, 32, 2, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * 4
+    k = jax.random.normal(ks[1], (B, S, KV, hd)) * 4
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = ops.flash_attention(q, k, v, group=1, causal=True, cap=20.0,
+                              bq=16, bk=16)
+    want = ref.flash_attention_ref(q, k, v, group=1, causal=True, cap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd", [
+    (2, 96, 4, 2, 32),
+    (3, 50, 8, 4, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, S, H, KV, hd, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = ops.flash_decode(q, k, v, lens, group=H // KV, bk=32)
+    want = ref.flash_decode_ref(q, k, v, lens, group=H // KV)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,nh,hp,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 96, 3, 16, 8, 32),
+    (1, 80, 4, 32, 16, 32),     # padded last chunk
+])
+def test_ssd_sweep(B, S, nh, hp, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    xh = jax.random.normal(ks[0], (B, S, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bp = jax.random.normal(ks[3], (B, S, N))
+    Cp = jax.random.normal(ks[4], (B, S, N))
+    y, h = ops.ssd(xh, dt, A, Bp, Cp, chunk=chunk)
+    y_ref, h_ref = ref.ssd_ref(xh, dt, A, Bp, Cp)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_matches_model_chunked():
+    """kernels.ops.ssd vs models.ssm.ssd_chunked (two implementations of the
+    same math must agree)."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    B, S, nh, hp, N = 2, 64, 2, 16, 8
+    xh = jax.random.normal(ks[0], (B, S, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)))
+    Bp = jax.random.normal(ks[3], (B, S, N))
+    Cp = jax.random.normal(ks[4], (B, S, N))
+    y1, h1 = ops.ssd(xh, dt, A, Bp, Cp, chunk=16)
+    y2, h2 = ssd_chunked(xh, dt, A, Bp, Cp, 16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-4)

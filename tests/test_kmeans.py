@@ -1,0 +1,88 @@
+"""Property tests for k-means / silhouette / selectors."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.intervals import IntervalBuilder
+from repro.core.kmeans import kmeans, pick_k_silhouette, random_projection, silhouette
+from repro.core.registry import BlockDef, BlockTable, Segment
+from repro.core.select import KMeansSelector, RandomSelector, SystematicSelector
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(8, 60),
+    d=st.integers(2, 8),
+    k=st.integers(2, 5),
+    seed=st.integers(0, 100),
+)
+def test_kmeans_invariants(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d))
+    k = min(k, n - 1)
+    assign, centers, inertia = kmeans(x, k, seed=seed)
+    assert assign.shape == (n,)
+    assert assign.min() >= 0 and assign.max() < k
+    # every point is assigned to its nearest centroid
+    d2 = (np.sum(x * x, 1)[:, None] - 2 * x @ centers.T
+          + np.sum(centers * centers, 1)[None])
+    np.testing.assert_array_equal(assign, np.argmin(d2, axis=1))
+    assert inertia >= 0
+
+
+def test_kmeans_separated_clusters():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(30, 4)) + 10
+    b = rng.normal(size=(30, 4)) - 10
+    x = np.concatenate([a, b])
+    assign, _, _ = kmeans(x, 2, seed=0)
+    assert len(set(assign[:30])) == 1
+    assert len(set(assign[30:])) == 1
+    assert assign[0] != assign[-1]
+    assert silhouette(x, assign) > 0.8
+    k, _, _ = pick_k_silhouette(x, max_k=10)
+    assert k == 2
+
+
+def test_random_projection_preserves_relative_distance():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(40, 200))
+    xp = random_projection(x, 15, seed=0)
+    assert xp.shape == (40, 15)
+    # close pairs stay closer than far pairs (JL, loose check)
+    d_orig = np.linalg.norm(x[0] - x[1]), np.linalg.norm(x[0] - 10 * x[2])
+    d_proj = np.linalg.norm(xp[0] - xp[1]), np.linalg.norm(xp[0] - 10 * random_projection(x, 15, seed=0)[2])
+    assert (d_orig[0] < d_orig[1]) == (d_proj[0] < d_proj[1])
+
+
+def _profile(n_steps=40, seed=0):
+    table = BlockTable([BlockDef("a", 10.0), BlockDef("b", 5.0)],
+                       [Segment((0, 1), 4)])
+    b = IntervalBuilder(table, 2.0 * table.step_uow())
+    rng = np.random.default_rng(seed)
+    for s in range(n_steps):
+        b.add_step()
+    return b.finalize()
+
+
+@pytest.mark.parametrize("selector", [
+    RandomSelector(n_samples=8, seed=0),
+    SystematicSelector(n_samples=8),
+    KMeansSelector(max_k=8, seed=0),
+])
+def test_selectors_contract(selector):
+    prof = _profile()
+    sel = selector.select(prof)
+    assert len(sel.interval_ids) == len(sel.weights)
+    assert len(set(sel.interval_ids)) == len(sel.interval_ids)
+    assert all(0 <= i < prof.n_intervals for i in sel.interval_ids)
+    assert sel.weights.sum() == pytest.approx(1.0)
+    assert (sel.weights > 0).all()
+    # sorted ids (stable artifact layout)
+    assert sel.interval_ids == sorted(sel.interval_ids)
+
+
+def test_kmeans_selector_respects_max_k():
+    prof = _profile(n_steps=120)
+    sel = KMeansSelector(max_k=5, seed=0).select(prof)
+    assert len(sel.interval_ids) <= 5

@@ -1,0 +1,99 @@
+"""Perf-lever features: int8 weight quant, parallel blocks, remat groups,
+causal-skip attention — correctness at smoke scale (the §Perf dry-run
+variants build on these)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import layers as L
+from repro.models.model_zoo import build_model
+
+
+@pytest.fixture(scope="module")
+def base():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    return cfg, m, params, {"tokens": toks, "labels": toks}
+
+
+def test_int8_weight_quant_forward_close(base):
+    cfg, m, params, batch = base
+    cfg_q = dataclasses.replace(cfg, weight_quant="int8")
+    m_q = build_model(cfg_q)
+    pq = L.quantize_params(params, m.axes())
+    # struct parity with quantized specs
+    sq = jax.eval_shape(lambda: m_q.init(jax.random.PRNGKey(0)))
+    assert jax.tree.structure(sq) == jax.tree.structure(pq)
+    lg, _ = jax.jit(m.forward)(params, batch)
+    lq, _ = jax.jit(m_q.forward)(pq, batch)
+    rel = float(jnp.mean(jnp.abs(lg - lq)) / jnp.mean(jnp.abs(lg)))
+    assert rel < 0.08, rel
+
+
+def test_int8_quant_decode_consistency(base):
+    """Quantized prefill+decode must match quantized teacher forcing."""
+    cfg, m, params, batch = base
+    cfg_q = dataclasses.replace(cfg, weight_quant="int8")
+    m_q = build_model(cfg_q)
+    pq = L.quantize_params(params, m.axes())
+    full, _ = jax.jit(m_q.forward)(pq, batch)
+    cache = m_q.init_cache(2, 24)
+    lg, cache, _ = jax.jit(m_q.prefill)(
+        pq, {"tokens": batch["tokens"][:, :8]}, cache)
+    err = [float(jnp.max(jnp.abs(lg[:, 0] - full[:, 7])))]
+    dec = jax.jit(m_q.decode_step)
+    for t in range(8, 16):
+        lg, cache, _ = dec(pq, batch["tokens"][:, t:t + 1], cache)
+        err.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(err) < 2e-4
+
+
+def test_parallel_block_train_and_decode_agree(base):
+    cfg, _, _, batch = base
+    cfg_p = dataclasses.replace(cfg, parallel_block=True)
+    m_p = build_model(cfg_p)
+    params = m_p.init(jax.random.PRNGKey(3))
+    full, _ = jax.jit(m_p.forward)(params, batch)
+    assert not bool(jnp.isnan(full).any())
+    cache = m_p.init_cache(2, 24)
+    lg, cache, _ = jax.jit(m_p.prefill)(
+        params, {"tokens": batch["tokens"][:, :8]}, cache)
+    err = [float(jnp.max(jnp.abs(lg[:, 0] - full[:, 7])))]
+    dec = jax.jit(m_p.decode_step)
+    for t in range(8, 16):
+        lg, cache, _ = dec(params, batch["tokens"][:, t:t + 1], cache)
+        err.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(err) < 2e-4
+
+
+def test_remat_group_exact(base):
+    cfg, m, params, batch = base
+    assert cfg.n_layers % 2 == 0
+    cfg_g = dataclasses.replace(cfg, remat_group=2)
+    m_g = build_model(cfg_g)
+    l1, _ = jax.jit(m.loss)(params, batch)
+    l2, _ = jax.jit(m_g.loss)(params, batch)
+    assert abs(float(l1 - l2)) < 1e-5
+    g1 = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: m_g.loss(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_causal_skip_exact(base):
+    cfg, m, params, batch = base
+    cfg_s = dataclasses.replace(cfg, attn_causal_skip=True, attn_chunk=8)
+    m_s = build_model(cfg_s)
+    f1, _ = jax.jit(m.forward)(params, batch)
+    f2, _ = jax.jit(m_s.forward)(params, batch)
+    np.testing.assert_allclose(np.asarray(f1, np.float32),
+                               np.asarray(f2, np.float32),
+                               rtol=2e-4, atol=2e-4)
