@@ -4,35 +4,117 @@ via jax.disable_jit, the gem5-ATOMIC analogue on this host).
 
 Reproduces the paper's ordering: hook overhead is a few percent; interpreted
 ("functional simulation") execution is orders of magnitude slower.
+
+Also benchmarks the host-side analysis pipeline itself: legacy per-step
+IntervalBuilder replay vs the vectorized batch path vs the chunked parallel
+path vs a profile-cache hit, reporting steps/s and intervals/s.  Run
+standalone (no model work, no jax) with::
+
+    PYTHONPATH=src python -m benchmarks.bench_interval_overhead --smoke
+
+which exits non-zero if the batch path fails to beat the legacy path or the
+two disagree on the resulting profile.
 """
 from __future__ import annotations
 
+import argparse
+import sys
+import tempfile
 import time
-from typing import List
+from typing import List, Tuple
 
-import jax
+import numpy as np
 
 from benchmarks.common import Row, time_fn
-from repro.configs import get_config, reduced
-from repro.train import Trainer
 
 ARCHS = ["qwen3-1.7b", "olmoe-1b-7b", "mamba2-780m", "zamba2-1.2b"]
 
+# synthetic analysis workload: fine-grained hook stream (small per-step
+# program, many steps) — the regime the paper's profiler runs in
+ANALYSIS_N_BLOCKS = 48
+ANALYSIS_N_STEPS = 2000
+ANALYSIS_INTERVAL_STEPS = 2.5
 
-def _step_time(tr: Trainer, instrumented: bool, steps: int = 4) -> float:
-    state = tr.init_state()
-    fn = tr._step_fn if instrumented else tr._uninstrumented
-    batch = tr._device_batch(0)
-    state, m, _ = fn(state, batch)          # compile
-    jax.block_until_ready(m["loss"])
-    t0 = time.perf_counter()
-    for s in range(steps):
-        state, m, _ = fn(state, tr._device_batch(s))
-    jax.block_until_ready(m["loss"])
-    return (time.perf_counter() - t0) / steps
+
+def _analysis_workload(n_steps: int = ANALYSIS_N_STEPS):
+    from repro.core.intervals_vec import as_steps
+    from repro.core.registry import BlockDef, BlockTable, Segment
+
+    rng = np.random.default_rng(0)
+    blocks = [BlockDef(f"b{i}", cost_ops=float(rng.integers(1, 40)))
+              for i in range(ANALYSIS_N_BLOCKS)]
+    segs = [Segment(tuple(int(x) for x in
+                          rng.integers(0, ANALYSIS_N_BLOCKS, 4)), 2)
+            for _ in range(3)]
+    table = BlockTable(blocks, segs)
+    steps = as_steps(n_steps=n_steps)
+    return table, steps, table.step_uow() * ANALYSIS_INTERVAL_STEPS
+
+
+def _profiles_equal(p, q) -> bool:
+    if p.n_intervals != q.n_intervals:
+        return False
+    return all(a.end_marker == b.end_marker and np.array_equal(a.bbv, b.bbv)
+               and np.array_equal(a.stamps, b.stamps)
+               for a, b in zip(p.intervals, q.intervals))
+
+
+def run_analysis_throughput(n_steps: int = ANALYSIS_N_STEPS
+                            ) -> Tuple[List[Row], bool]:
+    """Legacy vs batch vs parallel vs cached analysis throughput.
+
+    Returns (rows, ok): ok is False if the batch path is slower than the
+    legacy path or produces a different profile.
+    """
+    from repro.core.intervals import build_profile
+    from repro.core.profile_store import cached_build
+
+    table, steps, iu = _analysis_workload(n_steps)
+    rows: List[Row] = []
+    times = {}
+    profs = {}
+    for method in ("legacy", "batch", "parallel"):
+        times[method] = time_fn(
+            lambda m=method: profs.__setitem__(
+                m, build_profile(table, iu, steps, method=m)),
+            repeats=3, warmup=1)
+    with tempfile.TemporaryDirectory() as cache:
+        cached_build(cache, table, iu, steps)                 # populate
+        times["cached"] = time_fn(
+            lambda: cached_build(cache, table, iu, steps), repeats=3,
+            warmup=1)
+    n_ivl = profs["legacy"].n_intervals
+    for method in ("legacy", "batch", "parallel", "cached"):
+        t = times[method]
+        speed = times["legacy"] / t
+        rows.append((f"interval_analysis/{method}", t * 1e6,
+                     f"steps/s={n_steps / t:.0f} "
+                     f"intervals/s={n_ivl / t:.0f} "
+                     f"speedup={speed:.2f}x"))
+    ok = (times["batch"] < times["legacy"]
+          and _profiles_equal(profs["legacy"], profs["batch"])
+          and _profiles_equal(profs["legacy"], profs["parallel"]))
+    return rows, ok
 
 
 def run() -> List[Row]:
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.train import Trainer
+
+    def _step_time(tr: Trainer, instrumented: bool, steps: int = 4) -> float:
+        state = tr.init_state()
+        fn = tr._step_fn if instrumented else tr._uninstrumented
+        batch = tr._device_batch(0)
+        state, m, _ = fn(state, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for s in range(steps):
+            state, m, _ = fn(state, tr._device_batch(s))
+        jax.block_until_ready(m["loss"])
+        return (time.perf_counter() - t0) / steps
+
     rows: List[Row] = []
     for arch in ARCHS:
         cfg = reduced(get_config(arch))
@@ -60,4 +142,30 @@ def run() -> List[Row]:
         rows.append((f"interval_overhead/{arch}/functional_sim",
                      t_interp * 1e6,
                      f"slowdown={t_interp / t_plain:.1f}x"))
+    rows.extend(run_analysis_throughput()[0])
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="analysis-throughput section only (no jax model "
+                         "work); exit 1 if the batch path is slower than "
+                         "legacy or not equivalent")
+    ap.add_argument("--steps", type=int, default=ANALYSIS_N_STEPS)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        rows, ok = run_analysis_throughput(args.steps)
+    else:
+        rows, ok = run(), True
+    for n, us, d in rows:
+        print(f"{n},{us:.1f},{d}")
+    if not ok:
+        print("FAIL: batch path slower than legacy or not equivalent",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

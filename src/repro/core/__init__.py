@@ -12,7 +12,11 @@ from repro.core.registry import BlockDef, BlockTable, Segment  # noqa: F401
 from repro.core.blocks_lm import build_block_table  # noqa: F401
 from repro.core.meter import init_meter, tick_step, read_meter, meter_value  # noqa: F401
 from repro.core.intervals import (  # noqa: F401
-    Interval, IntervalBuilder, Marker, Profile, build_profile_from_steps,
+    Interval, IntervalBuilder, Marker, Profile, build_profile,
+    build_profile_from_steps, build_profile_parallel,
+)
+from repro.core.intervals_vec import (  # noqa: F401
+    ChunkResult, analyze_steps, analyze_steps_parallel, as_steps,
 )
 from repro.core.select import (  # noqa: F401
     KMeansSelector, RandomSelector, Selection, SystematicSelector, SELECTORS,
@@ -26,5 +30,8 @@ from repro.core.validate import (  # noqa: F401
     PlatformResult, consistency_report, nugget_variability, predict_total_time,
     prediction_error, signature_divergence, speedup_error_matrix,
 )
-from repro.core.profile_store import load_profile, save_profile  # noqa: F401
+from repro.core.profile_store import (  # noqa: F401
+    cached_build, cached_finalize, load_profile, profile_cache_key,
+    save_profile, stream_digest,
+)
 from repro.core import hlo_analysis  # noqa: F401

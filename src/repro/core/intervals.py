@@ -10,18 +10,34 @@ interval size — exactly the paper's hook logic.  Each interval gets:
   block within the interval),
 - the cumulative hit count of every block at its last execution (used to
   derive markers = (block, required-hit-count) pairs).
+
+Three build paths produce bit-for-bit identical Profiles:
+
+- ``add_step``  — legacy per-step replay (reference implementation),
+- ``add_steps`` — vectorized batch path (one cumsum/searchsorted/bincount
+  pass over the concatenated hook stream; see ``intervals_vec``),
+- ``build_profile_parallel`` — chunked ``concurrent.futures`` analysis whose
+  per-chunk partial states merge associatively.
+
+``IntervalBuilder(..., defer=True)`` only *logs* steps as they stream in
+(near-zero per-step cost inside a training/serving loop) and runs the batch
+analysis once at ``finalize()``.  ``step_log`` always records the full
+``(kind, dyn)`` stream — it is the content-addressed cache key input for
+``profile_store.cached_build`` / ``cached_finalize``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.intervals_vec import (ChunkResult, Step, analyze_steps,
+                                      analyze_steps_parallel, as_steps)
 from repro.core.registry import BlockTable
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class Marker:
     block: int          # block id
     hits: int           # cumulative executions of ``block`` since run start
@@ -36,7 +52,7 @@ class Marker:
         return Marker(d["block"], d["hits"], d["uow"])
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Interval:
     idx: int
     start_uow: float
@@ -75,7 +91,8 @@ class Profile:
 
 
 class IntervalBuilder:
-    def __init__(self, table: BlockTable, interval_uow: float):
+    def __init__(self, table: BlockTable, interval_uow: float,
+                 defer: bool = False):
         assert interval_uow > 0
         self.table = table
         self.interval_uow = float(interval_uow)
@@ -95,14 +112,32 @@ class IntervalBuilder:
         self._dyn: Dict[str, List] = {}
         self._virtual = [(i, b) for i, b in enumerate(table.blocks)
                          if b.virtual]
+        # per-builder hook-stream memo: one expansion per kind per builder
+        self._streams: Dict[str, Tuple[np.ndarray, np.ndarray]] = {
+            "default": (self.ids, self.cum)}
+        self.step_log: List[Step] = []   # full (kind, dyn) stream, in order
+        self._defer = defer              # True: analyze lazily at finalize()
+        self._processed = 0              # prefix of step_log already analyzed
+
+    def _stream(self, kind: str) -> Tuple[np.ndarray, np.ndarray]:
+        try:
+            return self._streams[kind]
+        except KeyError:
+            return self._streams.setdefault(kind, self.table.expand(kind))
 
     # ------------------------------------------------------------------
     def add_step(self, dyn: Optional[Dict[str, Any]] = None,
                  kind: str = "default"):
-        if kind == "default":
-            ids, cum = self.ids, self.cum
-        else:
-            ids, cum = self.table.expand(kind)
+        """Legacy per-step replay (the reference implementation)."""
+        self.step_log.append((kind, dyn))
+        if self._defer:
+            return
+        self._add_step_eager(dyn, kind)
+        self._processed += 1
+
+    def _add_step_eager(self, dyn: Optional[Dict[str, Any]],
+                        kind: str) -> None:
+        ids, cum = self._stream(kind)
         self._cur_total = float(cum[-1]) if len(cum) else 0.0
         g0 = self._g
         # record dynamic history
@@ -175,7 +210,105 @@ class IntervalBuilder:
         self._ivl_start_step = step_frac
 
     # ------------------------------------------------------------------
+    # batch (vectorized) path
+    # ------------------------------------------------------------------
+    def add_steps(self, steps: Optional[Sequence[Step]] = None, *,
+                  n_steps: Optional[int] = None,
+                  dyn_per_step: Optional[Sequence[Optional[Dict]]] = None,
+                  kinds: Optional[Sequence[str]] = None) -> None:
+        """Vectorized batch path: analyze a run of steps in one pass.
+
+        Accepts either an explicit ``[(kind, dyn), ...]`` stream or the
+        ``n_steps``/``dyn_per_step``/``kinds`` spelling.  Produces exactly
+        the intervals the equivalent sequence of ``add_step`` calls would.
+        """
+        steps = as_steps(n_steps=n_steps, dyn_per_step=dyn_per_step,
+                         kinds=kinds, steps=steps)
+        self.step_log.extend(steps)
+        if self._defer:
+            return
+        self._process_batch(steps)
+        self._processed += len(steps)
+
+    def _process_batch(self, steps: Sequence[Step]) -> None:
+        if not steps:
+            return
+        res = analyze_steps(self.table, self.interval_uow, steps,
+                            g0=self._g, step0=self._step,
+                            baseline_hits=self._cum_hits,
+                            expand=self._stream)
+        self._absorb(res, steps)
+
+    def absorb(self, res: ChunkResult, steps: Sequence[Step]) -> None:
+        """Merge an externally-computed chunk (see ``analyze_steps_parallel``)
+        into the builder.  Chunks must arrive in stream order."""
+        self.step_log.extend(steps)
+        self._processed += len(steps)
+        self._absorb(res, steps)
+
+    def _absorb(self, res: ChunkResult, steps: Sequence[Step]) -> None:
+        # Associative merge of a chunk's partial state: the carried open
+        # interval flows into the chunk's first close (counts add; the
+        # chunk's stamps/hits win for blocks it touched), the chunk's
+        # trailing open state becomes the new carry.  Virtual-block (dyn)
+        # contributions are applied after count merging so float addition
+        # order matches the legacy path bit-for-bit.
+        n_cl = len(res.end_uow)
+        dyn_by_row: Dict[int, List[Tuple[int, float]]] = {}
+        for r, i, v in res.dyn_add:
+            dyn_by_row.setdefault(r, []).append((i, v))
+        # plain-python scalars up front: the append loop below runs once per
+        # closed interval and dominates batch-path absorb time
+        eu = res.end_uow.tolist()
+        es = res.end_step.tolist()
+        mb = res.marker_block.tolist()
+        mh = res.marker_hits.tolist()
+        counts, stamps, hits = res.counts, res.stamps, res.hits
+        ivls = self.intervals
+        prev_eu, prev_es = self._ivl_start, self._ivl_start_step
+        for r in range(n_cl):
+            if r == 0:
+                touched = counts[0] > 0
+                bbv = counts[0] + self._bbv
+                stp = np.where(touched, stamps[0], self._stamps)
+                hit = np.where(touched, hits[0], self._hits_at)
+            else:
+                bbv, stp, hit = counts[r], stamps[r], hits[r]
+            if dyn_by_row:
+                for i, v in dyn_by_row.get(r, ()):
+                    bbv[i] += v
+            ivls.append(Interval(
+                idx=len(ivls), start_uow=prev_eu, end_uow=eu[r],
+                end_marker=Marker(mb[r], mh[r], eu[r]), bbv=bbv,
+                stamps=stp, hits_at_stamp=hit, start_step=prev_es,
+                end_step=es[r]))
+            prev_eu, prev_es = eu[r], es[r]
+        if n_cl:
+            self._bbv = res.counts[n_cl].copy()
+            self._stamps = res.stamps[n_cl].copy()
+            self._hits_at = res.hits[n_cl].copy()
+            self._ivl_start = float(res.end_uow[-1])
+            self._ivl_start_step = float(res.end_step[-1])
+        else:
+            tail = res.counts[0]
+            touched = tail > 0
+            self._bbv = self._bbv + tail
+            self._stamps = np.where(touched, res.stamps[0], self._stamps)
+            self._hits_at = np.where(touched, res.hits[0], self._hits_at)
+        self._g = res.g_end
+        self._cum_hits = res.hits_end.copy()
+        self._step += res.n_steps
+        for _, dyn in steps:
+            if dyn:
+                for k, v in dyn.items():
+                    self._dyn.setdefault(k, []).append(np.asarray(v))
+
+    # ------------------------------------------------------------------
     def finalize(self) -> Profile:
+        if self._processed < len(self.step_log):   # deferred analysis
+            pending = self.step_log[self._processed:]
+            self._processed = len(self.step_log)
+            self._process_batch(pending)
         dyn_hist = {k: np.stack(v) for k, v in self._dyn.items()}
         return Profile(
             table=self.table,
@@ -190,9 +323,48 @@ class IntervalBuilder:
 
 def build_profile_from_steps(table: BlockTable, n_steps: int,
                              interval_uow: float,
-                             dyn_per_step: Optional[List[Dict]] = None
-                             ) -> Profile:
+                             dyn_per_step: Optional[List[Dict]] = None,
+                             *, kinds: Optional[Sequence[str]] = None,
+                             method: str = "batch",
+                             chunk_steps: Optional[int] = None,
+                             max_workers: Optional[int] = None) -> Profile:
+    """Build a Profile from a step stream.
+
+    ``method`` selects the build path — ``"batch"`` (vectorized, default),
+    ``"legacy"`` (per-step reference) or ``"parallel"`` (chunked thread
+    pool); all three produce bit-for-bit identical Profiles.
+    """
+    steps = as_steps(n_steps=n_steps, dyn_per_step=dyn_per_step, kinds=kinds)
+    return build_profile(table, interval_uow, steps, method=method,
+                         chunk_steps=chunk_steps, max_workers=max_workers)
+
+
+def build_profile(table: BlockTable, interval_uow: float,
+                  steps: Sequence[Step], *, method: str = "batch",
+                  chunk_steps: Optional[int] = None,
+                  max_workers: Optional[int] = None) -> Profile:
+    """Like :func:`build_profile_from_steps` but takes an explicit
+    ``[(kind, dyn), ...]`` stream (serving-style heterogeneous steps)."""
     b = IntervalBuilder(table, interval_uow)
-    for i in range(n_steps):
-        b.add_step(dyn_per_step[i] if dyn_per_step else None)
+    if method == "legacy":
+        for kind, dyn in steps:
+            b.add_step(dyn, kind=kind)
+    elif method == "batch":
+        b.add_steps(steps)
+    elif method == "parallel":
+        for res, chunk in analyze_steps_parallel(
+                table, interval_uow, steps, chunk_steps=chunk_steps,
+                max_workers=max_workers):
+            b.absorb(res, chunk)
+    else:
+        raise ValueError(f"unknown build method {method!r}")
     return b.finalize()
+
+
+def build_profile_parallel(table: BlockTable, interval_uow: float,
+                           steps: Sequence[Step], *,
+                           chunk_steps: Optional[int] = None,
+                           max_workers: Optional[int] = None) -> Profile:
+    """Chunked parallel build (``concurrent.futures`` thread pool)."""
+    return build_profile(table, interval_uow, steps, method="parallel",
+                         chunk_steps=chunk_steps, max_workers=max_workers)

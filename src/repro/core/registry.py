@@ -49,6 +49,9 @@ class BlockTable:
     # ---- derived ----------------------------------------------------------
     def __post_init__(self):
         self._expand_cache: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        self._expand_count: Dict[str, int] = {}   # actual expansions, per kind
+        self._counts_cache: Dict[str, np.ndarray] = {}
+        self._occ_cache: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
         if self.programs is None:
             self.programs = {}
         if "default" not in self.programs:
@@ -79,10 +82,13 @@ class BlockTable:
 
         cum_uow[i] is the global-counter increment *after* hook i fires
         (i.e. the count-stamp the paper's hook would record), relative to
-        the start of the step.
+        the start of the step.  Expansions are memoized per kind (the
+        stream is static); ``_expand_count`` records how many times each
+        kind was actually materialized (regression-tested to stay at 1).
         """
         if kind in self._expand_cache:
             return self._expand_cache[kind]
+        self._expand_count[kind] = self._expand_count.get(kind, 0) + 1
         ids: List[int] = []
         for seg in self.programs[kind]:
             ids.extend(list(seg.pattern) * seg.repeat)
@@ -92,16 +98,51 @@ class BlockTable:
         self._expand_cache[kind] = (ids_arr, cum)
         return self._expand_cache[kind]
 
+    def expand_all(self) -> None:
+        """Materialize every kind's stream, counts and occurrence structure
+        (thread-safety warmup: worker threads then only read the caches)."""
+        for kind in self.programs:
+            self.expand(kind)
+            self.step_counts(kind)
+            self.step_occ(kind)
+
     def step_uow(self, kind: str = "default") -> float:
         _, cum = self.expand(kind)
         return float(cum[-1]) if len(cum) else 0.0
 
     def step_counts(self, kind: str = "default") -> np.ndarray:
         """Static per-step execution count of every (non-virtual) block."""
-        ids, _ = self.expand(kind)
-        out = np.zeros(self.n_blocks, np.int64)
-        np.add.at(out, ids, 1)
-        return out
+        if kind not in self._counts_cache:
+            ids, _ = self.expand(kind)
+            self._counts_cache[kind] = np.bincount(
+                ids, minlength=self.n_blocks).astype(np.int64)
+        return self._counts_cache[kind]
+
+    def step_occ(self, kind: str = "default"
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Static within-step occurrence structure of one kind's stream:
+        ``(occ, cnt_gather)`` where ``occ[i]`` is the 1-based rank of hook
+        ``i`` among executions of its block within one step and
+        ``cnt_gather[i]`` is that block's total per-step count.  A step
+        ``s`` of a same-kind run then has global cumulative hit counts
+        ``base + s * cnt_gather + occ`` — the vectorized batch analyzer's
+        sort-free hit computation.  Cached per kind (streams are static).
+        """
+        if kind not in self._occ_cache:
+            ids, _ = self.expand(kind)
+            m = len(ids)
+            occ = np.empty(m, np.int64)
+            if m:
+                order = np.argsort(ids, kind="stable")
+                sid = ids[order]
+                new = np.empty(m, bool)
+                new[0] = True
+                new[1:] = sid[1:] != sid[:-1]
+                starts = np.flatnonzero(new)
+                glen = np.diff(np.append(starts, m))
+                occ[order] = np.arange(m) - np.repeat(starts, glen) + 1
+            self._occ_cache[kind] = (occ, self.step_counts(kind)[ids])
+        return self._occ_cache[kind]
 
     def virtual_ids(self) -> List[int]:
         return [i for i, b in enumerate(self.blocks) if b.virtual]

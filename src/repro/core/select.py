@@ -80,9 +80,11 @@ class SystematicSelector:
 
 class KMeansSelector:
     def __init__(self, max_k: int = 50, seed: int = 0, project_dim: int = 15,
-                 fixed_k: Optional[int] = None):
+                 fixed_k: Optional[int] = None,
+                 n_workers: Optional[int] = None):
         self.max_k, self.seed, self.project_dim = max_k, seed, project_dim
         self.fixed_k = fixed_k
+        self.n_workers = n_workers       # thread-pool width for the k-sweep
 
     def select(self, profile: Profile) -> Selection:
         x = normalize_bbvs(profile)
@@ -92,7 +94,8 @@ class KMeansSelector:
             k = min(self.fixed_k, n)
             assign, centers, _ = kmeans(xp, k, seed=self.seed)
         else:
-            k, assign, centers = pick_k_silhouette(xp, self.max_k, self.seed)
+            k, assign, centers = pick_k_silhouette(
+                xp, self.max_k, self.seed, n_workers=self.n_workers)
         ids, weights = [], []
         for c in range(k):
             members = np.nonzero(assign == c)[0]

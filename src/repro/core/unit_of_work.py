@@ -118,8 +118,16 @@ class IRCost:
                       self.bytes * m)
 
 
-def jaxpr_cost(jaxpr) -> IRCost:
+def jaxpr_cost(jaxpr, _memo: Optional[Dict[int, IRCost]] = None) -> IRCost:
+    # sub-jaxprs are frequently shared (scan bodies, remat'd branches,
+    # repeated pjit calls); memoizing by identity within one top-level call
+    # makes the walk linear in *distinct* sub-jaxprs
     jaxpr = _as_jaxpr(jaxpr)
+    if _memo is None:
+        _memo = {}
+    cached = _memo.get(id(jaxpr))
+    if cached is not None:
+        return cached
     total = IRCost(0.0, 0.0, 0)
     for eqn in jaxpr.eqns:
         if eqn.primitive.name in _ANNOTATION_PRIMS:
@@ -128,12 +136,13 @@ def jaxpr_cost(jaxpr) -> IRCost:
         if subs:
             inner = IRCost(0.0, 0.0, unb)
             for sj, mult in subs:
-                inner = inner + jaxpr_cost(sj).scale(mult)
+                inner = inner + jaxpr_cost(sj, _memo).scale(mult)
             total = total + inner
             # the control-flow op itself counts as one executed op
             total = total + IRCost(1.0, 0.0, 0)
         else:
             total = total + IRCost(1.0, eqn_flops(eqn), 0, eqn_bytes(eqn))
+    _memo[id(jaxpr)] = total
     return total
 
 

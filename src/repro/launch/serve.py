@@ -21,6 +21,10 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--profile-out")
+    ap.add_argument("--profile-cache",
+                    help="content-addressed profile cache directory")
+    ap.add_argument("--defer-analysis", action="store_true",
+                    help="log steps while serving, batch-analyze at the end")
     args = ap.parse_args()
 
     import jax
@@ -36,15 +40,22 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed))
     eng = ServeEngine(cfg, batch=args.batch, max_seq=args.max_seq,
                       prefill_len=args.prefill_len,
-                      temperature=args.temperature, seed=args.seed)
+                      temperature=args.temperature, seed=args.seed,
+                      defer_analysis=args.defer_analysis)
     gen = SyntheticRequests(cfg.vocab_size, prompt_len=args.prefill_len,
                             mean_new=24, seed=args.seed)
     stats = eng.run(params, [gen.request(i) for i in range(args.requests)])
     print(json.dumps(stats, indent=1))
-    if args.profile_out:
-        from repro.core import save_profile
-        save_profile(args.profile_out, eng.profile())
-        print("profile saved to", args.profile_out)
+    if args.profile_out or args.profile_cache:
+        from repro.core import cached_finalize, save_profile
+        if args.profile_cache:
+            prof, hit = cached_finalize(args.profile_cache, eng.builder)
+            print("profile cache", "hit" if hit else "miss")
+        else:
+            prof = eng.profile()
+        if args.profile_out:
+            save_profile(args.profile_out, prof)
+            print("profile saved to", args.profile_out)
 
 
 if __name__ == "__main__":

@@ -55,7 +55,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, *, batch: int = 4, max_seq: int = 128,
                  prefill_len: int = 32, seed: int = 0,
                  temperature: float = 0.0, instrument: bool = True,
-                 interval_steps: float = 4.0):
+                 interval_steps: float = 4.0,
+                 defer_analysis: bool = False):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.batch, self.max_seq, self.prefill_len = batch, max_seq, prefill_len
@@ -78,7 +79,10 @@ class ServeEngine:
                 train=False, unit="flops")
             self.table = merge_tables({"prefill": tp, "decode": td})
             iu = interval_steps * self.table.step_uow("decode")
-            self.builder = IntervalBuilder(self.table, iu)
+            # defer_analysis=True only logs (kind, dyn) per step and runs
+            # the batch analysis once at profile()
+            self.builder = IntervalBuilder(self.table, iu,
+                                           defer=defer_analysis)
 
         self.reset()
 

@@ -56,7 +56,8 @@ class Trainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  keep_n: int = 3,
                  straggler_factor: float = 3.0,
-                 donate: bool = True):
+                 donate: bool = True,
+                 defer_analysis: bool = False):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.shape = shape or ShapeConfig("adhoc_train", "train", seq_len, batch)
@@ -80,7 +81,10 @@ class Trainer:
             build_block_table(self.model, self.shape) if instrument else None)
         self.interval_uow = (interval_steps * self.table.step_uow()
                              if self.table else 0.0)
-        self.builder = (IntervalBuilder(self.table, self.interval_uow)
+        # defer_analysis=True only logs steps during training (near-zero
+        # host-side cost per step) and batch-analyzes at profile()
+        self.builder = (IntervalBuilder(self.table, self.interval_uow,
+                                        defer=defer_analysis)
                         if self.table else None)
 
         step_fn = make_train_step(self.model, self.opt_cfg, self.lr_fn,

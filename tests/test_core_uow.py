@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.meter import _add64, init_meter, meter_value, tick_step
 from repro.core.registry import BlockDef, BlockTable, Segment

@@ -2,7 +2,7 @@
 keep the assigned arch's math exact for ANY (heads, kv, tp) combination."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.configs.base import AttnConfig
 from repro.models.attention import HeadLayout

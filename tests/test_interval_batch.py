@@ -1,0 +1,188 @@
+"""Equivalence + regression tests for the vectorized interval pipeline.
+
+The batch (``add_steps``), parallel (chunked thread-pool) and deferred
+(``defer=True``) build paths must produce Profiles that are bit-for-bit
+identical to the legacy per-step ``add_step`` replay — same interval
+boundaries, same float BBVs (including pro-rated virtual contributions),
+same stamps/hits/markers.  Streams are randomized: mixed step kinds,
+dynamic aux values, interval sizes that make single hooks span multiple
+boundaries, and interval sizes much larger than a step.
+"""
+import numpy as np
+import pytest
+
+from repro.core.intervals import (IntervalBuilder, build_profile,
+                                  build_profile_from_steps)
+from repro.core.intervals_vec import analyze_steps_parallel, as_steps
+from repro.core.registry import BlockDef, BlockTable, Segment
+
+
+def make_table(rng, n_blocks=8, n_virtual=2, kinds=("default",)):
+    blocks = [BlockDef(f"b{i}", cost_ops=float(rng.integers(1, 50)))
+              for i in range(n_blocks)]
+    for v in range(n_virtual):
+        blocks.append(BlockDef(f"v{v}", cost_ops=0.0, virtual=True,
+                               dyn_key=f"aux{v}",
+                               dyn_index=v if v % 2 == 0 else -1))
+    programs = {}
+    for k in kinds:
+        segs = []
+        for _ in range(int(rng.integers(1, 4))):
+            pat = tuple(int(x) for x in
+                        rng.integers(0, n_blocks, rng.integers(1, 5)))
+            segs.append(Segment(pat, int(rng.integers(1, 4))))
+        programs[k] = segs
+    return BlockTable(blocks, programs[kinds[0]], programs)
+
+
+def make_steps(rng, n_steps, kinds, dyn_prob=0.5):
+    steps = []
+    for _ in range(n_steps):
+        k = kinds[int(rng.integers(0, len(kinds)))]
+        dyn = None
+        if rng.random() < dyn_prob:
+            dyn = {"aux0": rng.random(4), "aux1": float(rng.random())}
+        steps.append((k, dyn))
+    return steps
+
+
+def assert_profiles_equal(p, q):
+    assert p.n_intervals == q.n_intervals
+    assert p.n_steps == q.n_steps
+    assert p.total_uow == q.total_uow
+    for a, b in zip(p.intervals, q.intervals):
+        assert a.idx == b.idx
+        assert a.start_uow == b.start_uow and a.end_uow == b.end_uow
+        assert a.start_step == b.start_step and a.end_step == b.end_step
+        assert a.end_marker == b.end_marker
+        assert np.array_equal(a.bbv, b.bbv), \
+            f"bbv mismatch at interval {a.idx}"
+        assert np.array_equal(a.stamps, b.stamps)
+        assert np.array_equal(a.hits_at_stamp, b.hits_at_stamp)
+    assert set(p.dyn_history) == set(q.dyn_history)
+    for k in p.dyn_history:
+        assert np.array_equal(p.dyn_history[k], q.dyn_history[k])
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_batch_and_parallel_match_legacy(seed):
+    rng = np.random.default_rng(seed)
+    kinds = ("default",) if seed % 3 == 0 else ("default", "prefill", "decode")
+    table = make_table(rng, n_blocks=int(rng.integers(3, 10)),
+                       n_virtual=int(rng.integers(0, 3)), kinds=kinds)
+    steps = make_steps(rng, int(rng.integers(5, 60)), kinds)
+    step_uow = max(table.step_uow(k) for k in kinds)
+    # interval sizes spanning: many closes per step, ~1 per step, and
+    # intervals covering many steps
+    for frac in (0.13, 0.61, 1.7, 7.3):
+        iu = max(step_uow * frac, 1.0)
+        legacy = build_profile(table, iu, steps, method="legacy")
+        batch = build_profile(table, iu, steps, method="batch")
+        assert_profiles_equal(legacy, batch)
+        par = build_profile(table, iu, steps, method="parallel",
+                            chunk_steps=int(rng.integers(1, 9)))
+        assert_profiles_equal(legacy, par)
+
+
+def test_single_hook_spans_multiple_boundaries():
+    table = BlockTable([BlockDef("big", cost_ops=100.0),
+                        BlockDef("small", cost_ops=1.0)],
+                       [Segment((1, 0, 1), 2)])
+    steps = as_steps(n_steps=7)
+    legacy = build_profile(table, 30.0, steps, method="legacy")
+    batch = build_profile(table, 30.0, steps, method="batch")
+    par = build_profile(table, 30.0, steps, method="parallel", chunk_steps=2)
+    assert_profiles_equal(legacy, batch)
+    assert_profiles_equal(legacy, par)
+    assert legacy.n_intervals > 0
+
+
+def test_mixed_incremental_paths_match():
+    rng = np.random.default_rng(123)
+    table = make_table(rng, kinds=("default", "decode"))
+    steps = make_steps(rng, 40, ("default", "decode"))
+    iu = table.step_uow() * 0.9
+
+    legacy = IntervalBuilder(table, iu)
+    for k, d in steps:
+        legacy.add_step(d, kind=k)
+
+    mixed = IntervalBuilder(table, iu)
+    for k, d in steps[:7]:
+        mixed.add_step(d, kind=k)
+    mixed.add_steps(steps[7:23])
+    for k, d in steps[23:29]:
+        mixed.add_step(d, kind=k)
+    mixed.add_steps(steps[29:])
+
+    assert_profiles_equal(legacy.finalize(), mixed.finalize())
+
+
+def test_deferred_analysis_matches_eager():
+    rng = np.random.default_rng(7)
+    table = make_table(rng, kinds=("default", "prefill"))
+    steps = make_steps(rng, 35, ("default", "prefill"))
+    iu = table.step_uow() * 1.3
+
+    eager = IntervalBuilder(table, iu)
+    for k, d in steps:
+        eager.add_step(d, kind=k)
+
+    deferred = IntervalBuilder(table, iu, defer=True)
+    for k, d in steps:
+        deferred.add_step(d, kind=k)
+    assert deferred.intervals == []          # nothing analyzed yet
+    assert len(deferred.step_log) == len(steps)
+
+    assert_profiles_equal(eager.finalize(), deferred.finalize())
+
+
+def test_absorb_chunks_incrementally():
+    rng = np.random.default_rng(11)
+    table = make_table(rng)
+    steps = make_steps(rng, 30, ("default",))
+    iu = table.step_uow() * 0.77
+    legacy = build_profile(table, iu, steps, method="legacy")
+    b = IntervalBuilder(table, iu)
+    for res, chunk in analyze_steps_parallel(table, iu, steps,
+                                             chunk_steps=4, max_workers=3):
+        b.absorb(res, chunk)
+    assert_profiles_equal(legacy, b.finalize())
+
+
+def test_build_profile_from_steps_methods_agree():
+    rng = np.random.default_rng(3)
+    table = make_table(rng, n_virtual=1)
+    dyns = [{"aux0": rng.random(4)} if i % 3 else None for i in range(25)]
+    p_leg = build_profile_from_steps(table, 25, table.step_uow() * 2.1,
+                                     dyn_per_step=dyns, method="legacy")
+    p_bat = build_profile_from_steps(table, 25, table.step_uow() * 2.1,
+                                     dyn_per_step=dyns, method="batch")
+    p_par = build_profile_from_steps(table, 25, table.step_uow() * 2.1,
+                                     dyn_per_step=dyns, method="parallel")
+    assert_profiles_equal(p_leg, p_bat)
+    assert_profiles_equal(p_leg, p_par)
+
+
+def test_expand_memoized_once_per_kind():
+    rng = np.random.default_rng(5)
+    table = make_table(rng, kinds=("default", "prefill", "decode"))
+    steps = make_steps(rng, 50, ("default", "prefill", "decode"), dyn_prob=0)
+    for method in ("legacy", "batch", "parallel"):
+        build_profile(table, table.step_uow() * 0.8, steps, method=method)
+    # memoization: each kind's stream was materialized exactly once ever,
+    # no matter how many builders/paths/steps consumed it
+    assert all(c == 1 for c in table._expand_count.values()), \
+        table._expand_count
+    assert set(table._expand_count) == {"default", "prefill", "decode"}
+
+
+def test_step_log_records_full_stream():
+    rng = np.random.default_rng(9)
+    table = make_table(rng)
+    steps = make_steps(rng, 12, ("default",))
+    b = IntervalBuilder(table, table.step_uow())
+    for k, d in steps[:5]:
+        b.add_step(d, kind=k)
+    b.add_steps(steps[5:])
+    assert b.step_log == steps

@@ -2,7 +2,7 @@
 invariants, marker semantics, low-overhead marker search."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.intervals import IntervalBuilder
 from repro.core.markers import low_overhead_marker, plan_markers

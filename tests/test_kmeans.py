@@ -1,7 +1,7 @@
 """Property tests for k-means / silhouette / selectors."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.intervals import IntervalBuilder
 from repro.core.kmeans import kmeans, pick_k_silhouette, random_projection, silhouette

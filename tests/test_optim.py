@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.optim import (AdamWConfig, adamw_update, clip_by_global_norm,
                          dequantize, global_norm, init_opt_state,

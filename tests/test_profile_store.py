@@ -1,0 +1,109 @@
+"""Round-trip + cache tests for the profile store."""
+import numpy as np
+
+from repro.core.intervals import IntervalBuilder, build_profile
+from repro.core.intervals_vec import as_steps
+from repro.core.profile_store import (cached_build, cached_finalize,
+                                      load_profile, profile_cache_key,
+                                      save_profile, stream_digest)
+from repro.core.registry import BlockDef, BlockTable, Segment
+
+
+def small_table():
+    return BlockTable([BlockDef("a", 10.0), BlockDef("b", 5.0),
+                       BlockDef("v", 0.0, virtual=True, dyn_key="aux")],
+                      [Segment((0, 1), 3)])
+
+
+def test_zero_interval_roundtrip_keeps_block_dim(tmp_path):
+    table = small_table()
+    # interval far bigger than the stream -> no interval ever closes
+    profile = build_profile(table, 1e9, as_steps(n_steps=3))
+    assert profile.n_intervals == 0
+    save_profile(str(tmp_path), profile)
+    loaded = load_profile(str(tmp_path))
+    assert loaded.n_intervals == 0
+    assert loaded.bbv_matrix().shape == (0, table.n_blocks)
+    z = np.load(tmp_path / "profile.npz")
+    assert z["bbvs"].shape == (0, table.n_blocks)
+    assert z["stamps"].shape == (0, table.n_blocks)
+    assert z["hits_at"].shape == (0, table.n_blocks)
+
+
+def test_roundtrip_preserves_intervals(tmp_path):
+    table = small_table()
+    steps = as_steps(n_steps=9,
+                     dyn_per_step=[{"aux": float(i)} for i in range(9)])
+    profile = build_profile(table, table.step_uow() * 1.4, steps)
+    assert profile.n_intervals > 0
+    save_profile(str(tmp_path), profile)
+    loaded = load_profile(str(tmp_path))
+    assert loaded.n_intervals == profile.n_intervals
+    for a, b in zip(profile.intervals, loaded.intervals):
+        assert a.end_marker == b.end_marker
+        assert np.array_equal(a.bbv, b.bbv)
+        assert np.array_equal(a.stamps, b.stamps)
+        assert np.array_equal(a.hits_at_stamp, b.hits_at_stamp)
+    assert np.array_equal(loaded.dyn_history["aux"],
+                          profile.dyn_history["aux"])
+
+
+def test_cache_hit_returns_equal_profile(tmp_path):
+    table = small_table()
+    steps = as_steps(n_steps=12,
+                     dyn_per_step=[{"aux": float(i % 3)} for i in range(12)])
+    iu = table.step_uow() * 0.8
+    p1, hit1 = cached_build(str(tmp_path), table, iu, steps)
+    p2, hit2 = cached_build(str(tmp_path), table, iu, steps)
+    assert not hit1 and hit2
+    assert p2.n_intervals == p1.n_intervals
+    for a, b in zip(p1.intervals, p2.intervals):
+        assert a.end_marker == b.end_marker
+        assert np.array_equal(a.bbv, b.bbv)
+
+
+def test_cache_invalidation(tmp_path):
+    table = small_table()
+    steps = as_steps(n_steps=10)
+    iu = table.step_uow() * 0.8
+    _, hit = cached_build(str(tmp_path), table, iu, steps)
+    assert not hit
+    # changed interval size -> miss
+    _, hit = cached_build(str(tmp_path), table, iu * 2, steps)
+    assert not hit
+    # changed dyn values -> miss
+    steps_dyn = as_steps(n_steps=10, dyn_per_step=[{"aux": 1.0}] * 10)
+    _, hit = cached_build(str(tmp_path), table, iu, steps_dyn)
+    assert not hit
+    # changed step kind stream -> different digest
+    assert stream_digest(steps) != stream_digest([("decode", None)] * 10)
+    # changed table -> different key
+    other = BlockTable([BlockDef("a", 11.0), BlockDef("b", 5.0)],
+                       [Segment((0, 1), 3)])
+    assert profile_cache_key(table, iu, steps) != \
+        profile_cache_key(other, iu, steps)
+
+
+def test_stream_digest_ignores_dict_order():
+    s1 = [("default", {"a": 1.0, "b": 2.0})]
+    s2 = [("default", {"b": 2.0, "a": 1.0})]
+    assert stream_digest(s1) == stream_digest(s2)
+
+
+def test_cached_finalize_with_deferred_builder(tmp_path):
+    table = small_table()
+    steps = as_steps(n_steps=15)
+    iu = table.step_uow() * 1.1
+    b1 = IntervalBuilder(table, iu, defer=True)
+    for k, d in steps:
+        b1.add_step(d, kind=k)
+    p1, hit1 = cached_finalize(str(tmp_path), b1)
+    assert not hit1
+
+    b2 = IntervalBuilder(table, iu, defer=True)
+    for k, d in steps:
+        b2.add_step(d, kind=k)
+    p2, hit2 = cached_finalize(str(tmp_path), b2)
+    assert hit2
+    assert b2.intervals == []            # analysis was skipped entirely
+    assert p2.n_intervals == p1.n_intervals
