@@ -1,0 +1,55 @@
+"""Pipeline-stage wall times + cache behaviour (run-manifest trajectory).
+
+Runs the artifact pipeline twice against one store on a reduced config:
+the cold pass measures per-stage compute cost, the warm pass measures
+cache-load cost and must hit on every stage.  ``run.py`` appends the
+summary (``LAST_ENTRY``) to ``BENCH_pipeline.json`` so perf history
+accumulates across benchmark invocations."""
+from __future__ import annotations
+
+import tempfile
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+from repro.pipeline import Pipeline, PipelineConfig
+
+N_STEPS = 16
+
+# summary of the most recent run() for the BENCH_pipeline.json trajectory
+LAST_ENTRY: Optional[Dict] = None
+
+
+def _summary(manifest: Dict) -> Dict:
+    return {
+        "wall_s": manifest["wall_s"],
+        "cache_hits": manifest["cache_hits"],
+        "cache_misses": manifest["cache_misses"],
+        "stage_wall_s": {s["stage"]: s["wall_s"]
+                         for s in manifest["stages"]},
+        "stage_cache_hit": {s["stage"]: s["cache_hit"]
+                            for s in manifest["stages"]},
+    }
+
+
+def run() -> List[Row]:
+    global LAST_ENTRY
+    rows: List[Row] = []
+    with tempfile.TemporaryDirectory(prefix="bench-pipe-") as store:
+        cfg = PipelineConfig(arch="olmoe-1b-7b", platforms=("f32",),
+                             selector="random",
+                             selector_args={"n_samples": 4, "seed": 0},
+                             steps=N_STEPS, seq_len=32, batch=2,
+                             interval_steps=2.0, seed=0)
+        cold = Pipeline(cfg, store).run()
+        warm = Pipeline(cfg, store).run()
+    assert warm["cache_misses"] == 0, \
+        f"warm pipeline re-ran stages: {warm['stages']}"
+    for label, manifest in (("cold", cold), ("warm", warm)):
+        for s in manifest["stages"]:
+            rows.append((f"pipeline/{label}/{s['stage']}",
+                         s["wall_s"] * 1e6, f"hit={s['cache_hit']}"))
+        rows.append((f"pipeline/{label}/total", manifest["wall_s"] * 1e6,
+                     f"hits={manifest['cache_hits']};"
+                     f"misses={manifest['cache_misses']}"))
+    LAST_ENTRY = {"cold": _summary(cold), "warm": _summary(warm)}
+    return rows

@@ -2,48 +2,38 @@
 
 Random vs K-means nuggets, validated natively on two 'platforms' (f32 vs
 bf16 compute — the container's stand-ins for distinct machines), without any
-simulation.  Reproduces the qualitative findings: errors vary by workload,
-no method dominates, per-platform errors differ."""
+simulation.  Driven by the artifact pipeline: both methods share one store,
+so the profile and full-run baselines are computed once per arch and the
+K-means pass re-runs only select/mark/replay/validate."""
 from __future__ import annotations
 
-import dataclasses
+import tempfile
 from typing import List
 
 from benchmarks.common import Row
-from repro.configs import get_config, reduced
-from repro.core import (KMeansSelector, RandomSelector, ReplayEngine,
-                        create_nuggets, measure_full_run, predict_total_time,
-                        prediction_error)
-from repro.train import Trainer
+from repro.pipeline import Pipeline, PipelineConfig
 
 ARCHS = ["olmoe-1b-7b", "qwen3-1.7b"]
 N_STEPS = 28
 
+METHODS = (("random", {"n_samples": 8, "seed": 0}),
+           ("kmeans", {"seed": 0}))
+
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    for arch in ARCHS:
-        base = reduced(get_config(arch))
-        trainers = {}
-        for plat, dt in (("f32", "float32"), ("bf16", "bfloat16")):
-            cfg = dataclasses.replace(base, compute_dtype=dt)
-            tr = Trainer(cfg, seq_len=32, batch=4, interval_steps=2.5,
-                         seed=0, donate=False)
-            tr.run(N_STEPS)
-            trainers[plat] = tr
-        prof = trainers["f32"].profile()
-        for method, sel in (("random", RandomSelector(n_samples=8, seed=0)),
-                            ("kmeans", KMeansSelector(seed=0))):
-            selection = sel.select(prof)
-            nugs = create_nuggets(prof, selection, warmup_intervals=1)
-            for plat, tr in trainers.items():
-                runner = tr.make_runner()
-                eng = ReplayEngine(runner, prof)
-                res = eng.replay_all(nugs)
-                pred = predict_total_time(prof, res)
-                actual = measure_full_run(runner, N_STEPS)
-                err = prediction_error(pred, actual)
-                rows.append((f"prediction_error/{arch}/{method}/{plat}",
-                             pred * 1e6,
-                             f"error={err:+.3f};actual_us={actual*1e6:.0f}"))
+    with tempfile.TemporaryDirectory(prefix="bench-pred-") as store:
+        for arch in ARCHS:
+            for method, sargs in METHODS:
+                cfg = PipelineConfig(arch=arch, platforms=("f32", "bf16"),
+                                     selector=method, selector_args=sargs,
+                                     steps=N_STEPS, seq_len=32, batch=4,
+                                     interval_steps=2.5, seed=0)
+                metrics = Pipeline(cfg, store).run()["metrics"]
+                for plat, m in metrics["platforms"].items():
+                    rows.append((
+                        f"prediction_error/{arch}/{method}/{plat}",
+                        m["predicted_s"] * 1e6,
+                        f"error={m['error']:+.3f};"
+                        f"actual_us={m['actual_s']*1e6:.0f}"))
     return rows

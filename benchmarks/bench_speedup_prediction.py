@@ -7,69 +7,49 @@ Platform axes mirror the paper's ISA-vs-microarchitecture study:
 
 Reports per-pair |predicted speedup - true speedup| / true speedup for
 Random and K-means sample sets, and the consistency summary the paper
-identifies as the key quality signal."""
+identifies as the key quality signal.  Driven by the artifact pipeline:
+the profile and per-platform baselines are cached across methods."""
 from __future__ import annotations
 
-import dataclasses
-import itertools
-from typing import Dict, List
+import tempfile
+from typing import List
 
 from benchmarks.common import Row
-from repro.configs import get_config, reduced
-from repro.core import (KMeansSelector, RandomSelector, ReplayEngine,
-                        PlatformResult, consistency_report, create_nuggets,
-                        measure_full_run, predict_total_time,
-                        speedup_error_matrix)
-from repro.train import Trainer
+from repro.pipeline import Pipeline, PipelineConfig
 
 N_STEPS = 24
+PLATFORMS = ("f32-chunk16", "bf16-chunk16", "f32-ref")
+
+METHODS = (("random", {"n_samples": 6, "seed": 0}),
+           ("kmeans", {"seed": 0}))
 
 
-def _platforms(base):
-    return {
-        "f32-chunk16": dataclasses.replace(base, compute_dtype="float32",
-                                           attn_chunk=16),
-        "bf16-chunk16": dataclasses.replace(base, compute_dtype="bfloat16",
-                                            attn_chunk=16),
-        "f32-ref": dataclasses.replace(base, compute_dtype="float32",
-                                       attention_impl="reference"),
-    }
+def _axis(pair: str) -> str:
+    if "f32-chunk16|bf16-chunk16" in pair:
+        return "dtype"
+    if "f32-chunk16|f32-ref" in pair:
+        return "impl"
+    return "both"
 
 
 def run() -> List[Row]:
     rows: List[Row] = []
-    base = reduced(get_config("qwen3-1.7b"))
-    trainers = {}
-    for name, cfg in _platforms(base).items():
-        tr = Trainer(cfg, seq_len=32, batch=4, interval_steps=2.5, seed=0,
-                     donate=False)
-        tr.run(N_STEPS)
-        trainers[name] = tr
-    prof = next(iter(trainers.values())).profile()
-
-    for method, sel in (("random", RandomSelector(n_samples=6, seed=0)),
-                        ("kmeans", KMeansSelector(seed=0))):
-        selection = sel.select(prof)
-        nugs = create_nuggets(prof, selection, warmup_intervals=1)
-        plats: List[PlatformResult] = []
-        for name, tr in trainers.items():
-            runner = tr.make_runner()
-            eng = ReplayEngine(runner, prof)
-            res = eng.replay_all(nugs)
-            plats.append(PlatformResult(
-                name, predict_total_time(prof, res),
-                measure_full_run(runner, N_STEPS)))
-        for e in speedup_error_matrix(plats):
-            kind = ("dtype" if "f32-chunk16|bf16-chunk16" in e["pair"]
-                    else "impl" if "f32-chunk16|f32-ref" in e["pair"]
-                    else "both")
-            rows.append((f"speedup_pred/{method}/{e['pair']}",
-                         e["abs_speedup_error"] * 1e6,
-                         f"axis={kind};true={e['true_speedup']:.3f};"
-                         f"pred={e['pred_speedup']:.3f}"))
-        rep = consistency_report(plats)
-        rows.append((f"speedup_pred/{method}/consistency",
-                     rep["error_spread"] * 1e6,
-                     f"mean_abs_err={rep['mean_abs_error']:.3f};"
-                     f"consistent={rep['consistent']}"))
+    with tempfile.TemporaryDirectory(prefix="bench-speedup-") as store:
+        for method, sargs in METHODS:
+            cfg = PipelineConfig(arch="qwen3-1.7b", platforms=PLATFORMS,
+                                 selector=method, selector_args=sargs,
+                                 steps=N_STEPS, seq_len=32, batch=4,
+                                 interval_steps=2.5, seed=0)
+            metrics = Pipeline(cfg, store).run()["metrics"]
+            for e in metrics["speedup_errors"]:
+                rows.append((f"speedup_pred/{method}/{e['pair']}",
+                             e["abs_speedup_error"] * 1e6,
+                             f"axis={_axis(e['pair'])};"
+                             f"true={e['true_speedup']:.3f};"
+                             f"pred={e['pred_speedup']:.3f}"))
+            rep = metrics["consistency"]
+            rows.append((f"speedup_pred/{method}/consistency",
+                         rep["error_spread"] * 1e6,
+                         f"mean_abs_err={rep['mean_abs_error']:.3f};"
+                         f"consistent={rep['consistent']}"))
     return rows

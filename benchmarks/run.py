@@ -1,16 +1,23 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §6).
-Prints ``name,us_per_call,derived`` CSV.  Select with --only substr."""
+Prints ``name,us_per_call,derived`` CSV.  Select with --only substr.
+
+The pipeline suite additionally appends its run-manifest summary (stage
+wall times + cache-hit counts) to ``BENCH_pipeline.json`` so perf history
+accumulates across invocations."""
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
 from benchmarks import (bench_hook_overhead, bench_interval_overhead,
                         bench_kernels, bench_model_accuracy,
-                        bench_prediction_error, bench_roofline,
-                        bench_speedup_prediction, bench_sync_scaling)
+                        bench_pipeline, bench_prediction_error,
+                        bench_roofline, bench_speedup_prediction,
+                        bench_sync_scaling)
 from benchmarks.common import fmt_rows
 
 SUITES = [
@@ -22,7 +29,26 @@ SUITES = [
     ("model_accuracy(Fig11)", bench_model_accuracy),
     ("kernels", bench_kernels),
     ("roofline", bench_roofline),
+    ("pipeline(manifest)", bench_pipeline),
 ]
+
+TRAJECTORY = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_pipeline.json")
+
+
+def write_trajectory(path: str = TRAJECTORY) -> None:
+    """Append the pipeline suite's manifest summary to the trajectory file."""
+    if bench_pipeline.LAST_ENTRY is None:
+        return
+    history = []
+    if os.path.exists(path):
+        with open(path) as f:
+            history = json.load(f)
+    history.append({"ts": time.time(), **bench_pipeline.LAST_ENTRY})
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"# pipeline trajectory -> {os.path.abspath(path)} "
+          f"({len(history)} entries)", flush=True)
 
 
 def main() -> None:
@@ -43,6 +69,7 @@ def main() -> None:
             failed.append(name)
             print(f"# {name} FAILED", flush=True)
             traceback.print_exc()
+    write_trajectory()
     if failed:
         print(f"# FAILED suites: {failed}")
         sys.exit(1)

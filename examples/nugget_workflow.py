@@ -1,41 +1,53 @@
-"""The full research workflow the paper enables (§IV-B + §V-A):
+"""The full research workflow the paper enables (§IV-B + §V-A), driven by
+the artifact pipeline (``repro.pipeline``):
 
-1. instrumented run -> interval profile (hooks, near-native speed),
+1. instrumented run -> interval profile (ProfileStage, cached),
 2. two selection methodologies (Random / K-means+silhouette),
-3. nugget creation with markers, warmup, LOW-OVERHEAD marker search,
+3. nugget creation with markers (MarkStage) + LOW-OVERHEAD marker search,
 4. native validation on TWO platforms (f32 vs bf16 execution),
 5. cross-platform consistency: speedup-prediction error + per-nugget
    variability — 'consistent error across platforms beats low error on one'.
 
+Both selector runs share one artifact store, so the second run reuses the
+cached profile and baselines and re-runs only select/mark/replay/validate.
+
     PYTHONPATH=src python examples/nugget_workflow.py
 """
-import dataclasses
+import os
+import tempfile
 
-from repro.configs import get_config, reduced
-from repro.core import (KMeansSelector, PlatformResult, RandomSelector,
-                        ReplayEngine, consistency_report, create_nuggets,
-                        measure_full_run, nugget_variability, plan_markers,
-                        predict_total_time, speedup_error_matrix)
-from repro.train import Trainer
+from repro.core import load_profile, plan_markers
+from repro.pipeline import Pipeline, PipelineConfig
 
 N_STEPS = 32
 
 
+def run_method(store: str, selector: str, selector_args: dict):
+    cfg = PipelineConfig(arch="olmoe-1b-7b", platforms=("f32", "bf16"),
+                         selector=selector, selector_args=selector_args,
+                         steps=N_STEPS, seq_len=32, batch=4,
+                         interval_steps=2.5, seed=0)
+    return Pipeline(cfg, store).run()
+
+
 def main():
-    base = reduced(get_config("olmoe-1b-7b"))
-    platforms = {
-        "f32": dataclasses.replace(base, compute_dtype="float32"),
-        "bf16": dataclasses.replace(base, compute_dtype="bfloat16"),
-    }
-    trainers = {}
-    for name, cfg in platforms.items():
-        print(f"== profiling run on platform {name}")
-        tr = Trainer(cfg, seq_len=32, batch=4, interval_steps=2.5, seed=0,
-                     donate=False)
-        tr.run(N_STEPS)
-        trainers[name] = tr
-    profile = trainers["f32"].profile()
-    print(f"== {profile.n_intervals} intervals")
+    store = os.environ.get("REPRO_STORE",
+                           tempfile.mkdtemp(prefix="nugget-store-"))
+    print(f"== artifact store: {store}")
+    manifests = {}
+    for mname, sargs in (("random", {"n_samples": 6, "seed": 0}),
+                         ("kmeans", {"seed": 0})):
+        manifests[mname] = run_method(store, mname, sargs)
+        hits = manifests[mname]["cache_hits"]
+        print(f"== {mname}: {hits} cache hits / "
+              f"{manifests[mname]['cache_misses']} misses")
+
+    # the profile is an inspectable artifact: load it back from the store
+    prof_entry = next(s for s in manifests["random"]["stages"]
+                      if s["kind"] == "profile")
+    profile = load_profile(os.path.join(prof_entry["path"], "profile"))
+    print(f"== {profile.n_intervals} intervals "
+          f"(profile artifact {prof_entry['key'][:12]})")
 
     # marker study: true end marker vs low-overhead search
     plain = plan_markers(profile, 2, search_distance=0.0)
@@ -48,29 +60,18 @@ def main():
           f"(fraction {cheap.hook_fraction:.3f}, "
           f"precision loss {cheap.precision_loss_uow:.0f} uow)")
 
-    for mname, selector in (("random", RandomSelector(n_samples=6, seed=0)),
-                            ("kmeans", KMeansSelector(seed=0))):
-        sel = selector.select(profile)
-        nuggets = create_nuggets(profile, sel, warmup_intervals=1)
-        plats, results_by = [], {}
-        for pname, tr in trainers.items():
-            runner = tr.make_runner()
-            eng = ReplayEngine(runner, profile)
-            res = eng.replay_all(nuggets)
-            results_by[pname] = res
-            plats.append(PlatformResult(
-                pname, predict_total_time(profile, res),
-                measure_full_run(runner, N_STEPS)))
+    for mname, manifest in manifests.items():
+        m = manifest["metrics"]
         print(f"\n== {mname}: per-platform prediction error:",
-              {p.platform: f"{p.error:+.1%}" for p in plats})
-        for e in speedup_error_matrix(plats):
+              {p: f"{v['error']:+.1%}" for p, v in m["platforms"].items()})
+        for e in m["speedup_errors"]:
             print(f"   speedup {e['pair']}: true {e['true_speedup']:.3f} "
                   f"pred {e['pred_speedup']:.3f} "
                   f"err {e['abs_speedup_error']:.1%}")
-        rep = consistency_report(plats)
+        rep = m["consistency"]
         print(f"   consistency: spread={rep['error_spread']:.3f} "
               f"=> {'TRUSTWORTHY' if rep['consistent'] else 'SUSPECT'}")
-        worst = nugget_variability(results_by)[0]
+        worst = m["nugget_variability"][0]
         print(f"   most platform-sensitive nugget: id {worst['nugget_id']} "
               f"(rel-cost spread {worst['rel_cost_spread']:.3f})")
 

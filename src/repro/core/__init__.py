@@ -27,8 +27,9 @@ from repro.core.markers import (  # noqa: F401
 from repro.core.nugget import Nugget, create_nuggets, load_nuggets, save_nuggets  # noqa: F401
 from repro.core.replay import ReplayEngine, ReplayResult, SimpleRunner, measure_full_run  # noqa: F401
 from repro.core.validate import (  # noqa: F401
-    PlatformResult, consistency_report, nugget_variability, predict_total_time,
-    prediction_error, signature_divergence, speedup_error_matrix,
+    PlatformResult, consistency_report, full_run_baseline, nugget_variability,
+    platform_results, predict_total_time, prediction_error,
+    signature_divergence, speedup_error_matrix, validation_report,
 )
 from repro.core.profile_store import (  # noqa: F401
     cached_build, cached_finalize, load_profile, profile_cache_key,

@@ -63,6 +63,13 @@ class ReplayResult:
     def to_json(self):
         return dataclasses.asdict(self)
 
+    @staticmethod
+    def from_json(d: Dict) -> "ReplayResult":
+        return ReplayResult(int(d["nugget_id"]), int(d["interval_idx"]),
+                            float(d["weight"]), float(d["region_time_s"]),
+                            int(d["steps_timed"]), int(d["warmup_steps"]),
+                            float(d["uow"]))
+
 
 class ReplayEngine:
     def __init__(self, runner: StepRunner, profile: Profile):

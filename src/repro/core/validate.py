@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.core.intervals import Profile
 from repro.core.nugget import Nugget
-from repro.core.replay import ReplayResult
+from repro.core.replay import ReplayResult, StepRunner, measure_full_run
 
 
 def predict_total_time(profile: Profile, results: Sequence[ReplayResult]
@@ -90,6 +90,47 @@ def nugget_variability(results_by_platform: Dict[str, List[ReplayResult]]
                     "rel_cost_spread": float(rel[:, j].max() - rel[:, j].min()),
                     "rel_cost_mean": float(rel[:, j].mean())})
     return sorted(out, key=lambda d: -d["rel_cost_spread"])
+
+
+def full_run_baseline(runner: StepRunner, n_steps: int,
+                      *, start: int = 0) -> Dict[str, float]:
+    """Validation-side ground truth for one platform, as a JSON-able record.
+
+    All full-run measurement for validation flows through here (and so
+    becomes a cacheable artifact) instead of being re-measured ad hoc per
+    example/benchmark."""
+    return {"n_steps": int(n_steps),
+            "actual_s": float(measure_full_run(runner, n_steps, start=start))}
+
+
+def platform_results(profile: Profile,
+                     results_by_platform: Dict[str, List[ReplayResult]],
+                     baselines: Dict[str, Dict[str, float]]
+                     ) -> List[PlatformResult]:
+    """Assemble per-platform predicted-vs-actual pairs from replay-result
+    lists and :func:`full_run_baseline` records (platform order preserved)."""
+    return [PlatformResult(p, predict_total_time(profile, results_by_platform[p]),
+                           float(baselines[p]["actual_s"]))
+            for p in results_by_platform]
+
+
+def validation_report(profile: Profile,
+                      results_by_platform: Dict[str, List[ReplayResult]],
+                      baselines: Dict[str, Dict[str, float]]) -> Dict:
+    """The full §V-A validation summary as one JSON-able dict: per-platform
+    prediction error, pairwise speedup errors, cross-platform consistency,
+    and per-nugget variability."""
+    plats = platform_results(profile, results_by_platform, baselines)
+    have_results = all(results_by_platform.values())
+    return {
+        "platforms": {p.platform: {"predicted_s": p.predicted,
+                                   "actual_s": p.actual,
+                                   "error": p.error} for p in plats},
+        "speedup_errors": speedup_error_matrix(plats) if len(plats) > 1 else [],
+        "consistency": consistency_report(plats),
+        "nugget_variability": (nugget_variability(results_by_platform)
+                               if have_results else []),
+    }
 
 
 def signature_divergence(profile_a: Profile, profile_b: Profile

@@ -19,6 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:                                        # jax >= 0.6
+    _shard_map = jax.shard_map
+except AttributeError:                      # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
           mesh: Mesh, axis: str = "stage"):
@@ -66,7 +71,7 @@ def gpipe(stage_fn: Callable[[Any, jax.Array], jax.Array],
         mask = (idx == S - 1).astype(outs.dtype)
         return jax.lax.psum(outs * mask, axis)
 
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

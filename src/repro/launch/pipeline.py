@@ -1,0 +1,97 @@
+"""Single entrypoint for the end-to-end sampling pipeline.
+
+Runs profile -> select -> mark -> replay -> validate against a
+content-addressed artifact store and emits a JSON run manifest (stage
+timings, cache hits, artifact digests, prediction/speedup errors).
+Re-running with the same flags hits the cache for every stage; changing
+only ``--selector`` re-runs selection and downstream stages while the
+profile and baseline artifacts are reused.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.pipeline --arch olmoe-1b-7b \
+        --reduced --steps 16 --selector kmeans --platforms f32,bf16 \
+        --store /tmp/artifacts --manifest-out /tmp/manifest.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+
+
+def build_config(args) -> "PipelineConfig":
+    from repro.pipeline import PipelineConfig
+    if args.selector == "random":
+        selector_args = {"n_samples": args.n_samples,
+                         "seed": args.selector_seed}
+    elif args.selector == "systematic":
+        selector_args = {"n_samples": args.n_samples}
+    else:                                   # kmeans
+        selector_args = {"seed": args.selector_seed}
+        if args.fixed_k:
+            selector_args["fixed_k"] = args.fixed_k
+    return PipelineConfig(
+        arch=args.arch,
+        platforms=tuple(p for p in args.platforms.split(",") if p),
+        selector=args.selector,
+        selector_args=selector_args,
+        steps=args.steps, seq_len=args.seq_len, batch=args.batch,
+        interval_steps=args.interval_steps, seed=args.seed,
+        reduce=args.reduced,
+        warmup_intervals=args.warmup_intervals,
+        search_distance=args.search_distance,
+        ckpt_every=args.ckpt_every,
+        defer_analysis=not args.no_defer_analysis,
+        profile_platform=args.profile_platform,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="artifact-driven profile/select/mark/replay/validate run")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--interval-steps", type=float, default=2.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--selector", default="kmeans",
+                    choices=("random", "kmeans", "systematic"))
+    ap.add_argument("--n-samples", type=int, default=6,
+                    help="sample count for random/systematic selectors")
+    ap.add_argument("--selector-seed", type=int, default=0)
+    ap.add_argument("--fixed-k", type=int, default=0,
+                    help="k-means: skip the silhouette sweep, use this k")
+    ap.add_argument("--platforms", default="f32,bf16",
+                    help="comma-separated platform tokens "
+                         "(f32, bf16, f32-ref, bf16-chunk16, ...)")
+    ap.add_argument("--profile-platform",
+                    help="platform to profile on (default: first)")
+    ap.add_argument("--warmup-intervals", type=int, default=1)
+    ap.add_argument("--search-distance", type=float, default=0.0,
+                    help="low-overhead marker search distance (UoW)")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--no-defer-analysis", action="store_true",
+                    help="legacy per-step interval analysis instead of the "
+                         "deferred vectorized batch path")
+    ap.add_argument("--store", default="/tmp/repro-artifacts",
+                    help="content-addressed artifact store root")
+    ap.add_argument("--manifest-out",
+                    help="also write the run manifest JSON to this path")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.WARNING)
+
+    from repro.pipeline import Pipeline
+
+    manifest = Pipeline(build_config(args), args.store).run()
+    out = json.dumps(manifest, indent=1, default=str)
+    print(out)
+    if args.manifest_out:
+        with open(args.manifest_out, "w") as f:
+            f.write(out)
+
+
+if __name__ == "__main__":
+    main()

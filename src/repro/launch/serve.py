@@ -23,8 +23,13 @@ def main():
     ap.add_argument("--profile-out")
     ap.add_argument("--profile-cache",
                     help="content-addressed profile cache directory")
-    ap.add_argument("--defer-analysis", action="store_true",
-                    help="log steps while serving, batch-analyze at the end")
+    ap.add_argument("--no-defer-analysis", action="store_true",
+                    help="legacy per-step interval analysis (the default "
+                         "defers: log steps while serving, batch-analyze "
+                         "at the end with the vectorized path)")
+    ap.add_argument("--store",
+                    help="ArtifactStore root: persist the profile as a "
+                         "content-addressed pipeline artifact")
     args = ap.parse_args()
 
     import jax
@@ -41,21 +46,22 @@ def main():
     eng = ServeEngine(cfg, batch=args.batch, max_seq=args.max_seq,
                       prefill_len=args.prefill_len,
                       temperature=args.temperature, seed=args.seed,
-                      defer_analysis=args.defer_analysis)
+                      defer_analysis=not args.no_defer_analysis)
     gen = SyntheticRequests(cfg.vocab_size, prompt_len=args.prefill_len,
                             mean_new=24, seed=args.seed)
     stats = eng.run(params, [gen.request(i) for i in range(args.requests)])
     print(json.dumps(stats, indent=1))
-    if args.profile_out or args.profile_cache:
-        from repro.core import cached_finalize, save_profile
-        if args.profile_cache:
-            prof, hit = cached_finalize(args.profile_cache, eng.builder)
-            print("profile cache", "hit" if hit else "miss")
-        else:
-            prof = eng.profile()
-        if args.profile_out:
-            save_profile(args.profile_out, prof)
-            print("profile saved to", args.profile_out)
+    if args.profile_out or args.profile_cache or args.store:
+        import dataclasses
+
+        from repro.pipeline import persist_profile_cli
+        persist_profile_cli(
+            eng.builder, profile_out=args.profile_out,
+            profile_cache=args.profile_cache, store=args.store,
+            spec={"arch": dataclasses.asdict(cfg), "kind": "serve",
+                  "requests": args.requests, "batch": args.batch,
+                  "max_seq": args.max_seq, "prefill_len": args.prefill_len,
+                  "temperature": args.temperature, "seed": args.seed})
 
 
 if __name__ == "__main__":

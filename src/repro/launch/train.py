@@ -31,9 +31,13 @@ def main():
                     help="content-addressed profile cache directory: "
                          "identical (table, interval, step stream) runs "
                          "load the stored profile instead of re-analyzing")
-    ap.add_argument("--defer-analysis", action="store_true",
-                    help="log steps during training, batch-analyze at the "
-                         "end (lowest per-step host overhead)")
+    ap.add_argument("--no-defer-analysis", action="store_true",
+                    help="legacy per-step interval analysis (the default "
+                         "defers: log steps during training, batch-analyze "
+                         "at the end with the vectorized path)")
+    ap.add_argument("--store",
+                    help="ArtifactStore root: persist the profile as a "
+                         "content-addressed pipeline artifact")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
@@ -58,23 +62,25 @@ def main():
                  interval_steps=args.interval_steps,
                  microbatch=args.microbatch,
                  ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-                 defer_analysis=args.defer_analysis)
+                 defer_analysis=not args.no_defer_analysis)
     state = tr.run(args.steps, log_every=args.log_every)
     print(json.dumps({
         "final_loss": tr.metrics_history[-1]["loss"],
         "mean_step_s": sum(tr.step_times[1:]) / max(len(tr.step_times) - 1, 1),
         "stragglers": tr.watchdog_report().slow_steps,
     }, indent=1))
-    if (args.profile_out or args.profile_cache) and not args.no_instrument:
-        from repro.core import cached_finalize, save_profile
-        if args.profile_cache:
-            prof, hit = cached_finalize(args.profile_cache, tr.builder)
-            print("profile cache", "hit" if hit else "miss")
-        else:
-            prof = tr.profile()
-        if args.profile_out:
-            save_profile(args.profile_out, prof)
-            print("profile saved to", args.profile_out)
+    if (args.profile_out or args.profile_cache or args.store) \
+            and not args.no_instrument:
+        import dataclasses
+
+        from repro.pipeline import persist_profile_cli
+        persist_profile_cli(
+            tr.builder, profile_out=args.profile_out,
+            profile_cache=args.profile_cache, store=args.store,
+            spec={"arch": dataclasses.asdict(cfg), "kind": "train",
+                  "seq_len": args.seq_len, "batch": args.batch,
+                  "steps": args.steps, "seed": args.seed,
+                  "interval_steps": args.interval_steps})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+"""Artifact-driven sampling pipeline: the paper's profile -> select ->
+mark -> replay -> validate lifecycle as composable typed stages over a
+content-addressed :class:`ArtifactStore` (see ``docs/pipeline.md``)."""
+from repro.pipeline.store import (  # noqa: F401
+    ARTIFACT_KINDS, Artifact, ArtifactStore, artifact_key, canonical_json,
+    persist_profile_cli,
+)
+from repro.pipeline.stages import (  # noqa: F401
+    BaselineStage, MarkStage, ProfileStage, ReplayStage, SelectStage, Stage,
+    ValidateStage,
+)
+from repro.pipeline.runtime import (  # noqa: F401
+    Pipeline, PipelineConfig, PipelineContext, platform_config,
+)

@@ -1,0 +1,160 @@
+"""Pipeline orchestration: config, context (lazy per-platform trainers),
+stage graph and the JSON run manifest.
+
+A *platform* is named by a token parsed into config overrides, e.g.
+``f32``, ``bf16-chunk16``, ``f32-ref`` — the same dtype/impl axes the
+benchmarks use as stand-ins for distinct machines.  The profile is taken
+on ``profile_platform`` (default: the first platform); replay + baseline
+run on every platform; validation summarizes across them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ArchConfig
+from repro.pipeline.stages import (BaselineStage, MarkStage, ProfileStage,
+                                   ReplayStage, SelectStage, Stage,
+                                   ValidateStage)
+from repro.pipeline.store import Artifact, ArtifactStore
+
+
+def platform_config(base: ArchConfig, token: str) -> ArchConfig:
+    """Apply a platform token's overrides: dash-separated parts out of
+    {f32, bf16, f16, ref, chunk<N>} (e.g. ``bf16-chunk16``, ``f32-ref``)."""
+    changes: Dict[str, Any] = {}
+    for part in token.split("-"):
+        if part in ("f32", "fp32", "float32"):
+            changes["compute_dtype"] = "float32"
+        elif part in ("bf16", "bfloat16"):
+            changes["compute_dtype"] = "bfloat16"
+        elif part in ("f16", "float16"):
+            changes["compute_dtype"] = "float16"
+        elif part == "ref":
+            changes["attention_impl"] = "reference"
+        elif part.startswith("chunk"):
+            changes["attn_chunk"] = int(part[len("chunk"):])
+        else:
+            raise ValueError(f"unknown platform token part {part!r} "
+                             f"in {token!r}")
+    return dataclasses.replace(base, **changes)
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    arch: str
+    platforms: Sequence[str] = ("f32", "bf16")
+    selector: str = "kmeans"
+    selector_args: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    steps: int = 32
+    seq_len: int = 32
+    batch: int = 4
+    interval_steps: float = 2.5
+    seed: int = 0
+    reduce: bool = True
+    warmup_intervals: int = 1
+    search_distance: float = 0.0
+    ckpt_every: int = 0
+    defer_analysis: bool = True          # batch (vectorized) interval analysis
+    profile_platform: Optional[str] = None   # default: platforms[0]
+
+    @property
+    def profile_platform_name(self) -> str:
+        return self.profile_platform or self.platforms[0]
+
+    def base_cfg(self) -> ArchConfig:
+        cfg = get_config(self.arch)
+        return reduced(cfg, seq=self.seq_len) if self.reduce else cfg
+
+    def arch_for(self, platform: str) -> ArchConfig:
+        return platform_config(self.base_cfg(), platform)
+
+    def platform_spec(self, platform: str) -> Dict:
+        """Everything a platform run depends on (part of stage specs)."""
+        return {"arch": dataclasses.asdict(self.arch_for(platform)),
+                "platform": platform, "seq_len": self.seq_len,
+                "batch": self.batch, "seed": self.seed}
+
+
+class PipelineContext:
+    """Per-run state stages see: config, store, produced artifacts/payloads,
+    manifest entries, and lazily constructed per-platform trainers (a cache
+    hit upstream means the corresponding trainer is never even built)."""
+
+    def __init__(self, cfg: PipelineConfig, store: ArtifactStore):
+        self.cfg = cfg
+        self.store = store
+        self.artifacts: Dict[str, Artifact] = {}
+        self.payloads: Dict[str, Any] = {}
+        self.manifest: List[Dict] = []
+        self._trainers: Dict[str, Any] = {}
+
+    # -- artifact accessors (stage name -> product) --------------------
+    def key(self, name: str) -> str:
+        return self.artifacts[name].key
+
+    def payload(self, name: str) -> Any:
+        return self.payloads[name]
+
+    def record(self, stage: Stage, art: Artifact, payload: Any,
+               hit: bool, wall_s: float) -> None:
+        self.artifacts[stage.name] = art
+        self.payloads[stage.name] = payload
+        self.manifest.append({"stage": stage.name, "kind": stage.kind,
+                              "key": art.key, "cache_hit": hit,
+                              "wall_s": wall_s, "path": art.path})
+
+    # -- platforms -----------------------------------------------------
+    def trainer(self, platform: str):
+        """Lazy Trainer per platform.  Only the profile platform is
+        instrumented; replay/baseline platforms use the plain step fn."""
+        if platform not in self._trainers:
+            from repro.train import Trainer
+            cfg = self.cfg
+            self._trainers[platform] = Trainer(
+                cfg.arch_for(platform), seq_len=cfg.seq_len, batch=cfg.batch,
+                interval_steps=cfg.interval_steps, seed=cfg.seed,
+                instrument=(platform == cfg.profile_platform_name),
+                defer_analysis=cfg.defer_analysis, donate=False)
+        return self._trainers[platform]
+
+    def runner(self, platform: str):
+        return self.trainer(platform).make_runner()
+
+
+class Pipeline:
+    """The end-to-end nugget lifecycle as a resumable stage graph."""
+
+    def __init__(self, cfg: PipelineConfig,
+                 store: Union[str, ArtifactStore]):
+        self.cfg = cfg
+        self.store = (store if isinstance(store, ArtifactStore)
+                      else ArtifactStore(store))
+
+    def stages(self) -> List[Stage]:
+        out: List[Stage] = [ProfileStage(), SelectStage(), MarkStage()]
+        for p in self.cfg.platforms:
+            out.append(BaselineStage(p))
+        for p in self.cfg.platforms:
+            out.append(ReplayStage(p))
+        out.append(ValidateStage())
+        return out
+
+    def run(self) -> Dict:
+        """Run every stage (cache-aware) and return the run manifest."""
+        ctx = PipelineContext(self.cfg, self.store)
+        t0 = time.perf_counter()
+        for stage in self.stages():
+            stage.run(ctx)
+        hits = sum(1 for s in ctx.manifest if s["cache_hit"])
+        return {
+            "config": dataclasses.asdict(self.cfg),
+            "store": self.store.root,
+            "stages": ctx.manifest,
+            "metrics": ctx.payload("validate"),
+            "cache_hits": hits,
+            "cache_misses": len(ctx.manifest) - hits,
+            "wall_s": time.perf_counter() - t0,
+        }

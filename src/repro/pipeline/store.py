@@ -1,0 +1,158 @@
+"""Content-addressed artifact store for the sampling pipeline.
+
+Generalizes ``core/profile_store.py`` (which persists only Profiles) to
+*every* lifecycle product: profiles, selections, nuggets, replay results,
+full-run baselines and validation reports.  Layout::
+
+    <root>/<kind>/<key>/spec.json    # provenance: spec + upstream keys
+    <root>/<kind>/<key>/...          # kind-specific payload files
+
+Keys are **input-addressed**: ``key = sha256(kind || upstream keys ||
+canonical spec JSON)``.  A stage's spec is everything its computation
+depends on (resolved config), and its upstream list is the keys of the
+artifacts it consumes — so digests chain through the stage graph exactly
+like a build system.  Re-running a pipeline after changing only the
+selector changes the selection key (and, transitively, every downstream
+key) while the profile and baseline keys — which do not consume the
+selection — stay put and hit the cache.
+
+``spec.json`` is written last, atomically (write + ``os.replace``); its
+presence marks the artifact complete, so a crashed run never leaves a
+half-written directory that later loads as a hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.intervals import Profile
+from repro.core.profile_store import load_profile, save_profile
+
+ARTIFACT_KINDS = ("profile", "selection", "nuggets", "replay", "baseline",
+                  "validation")
+
+
+def canonical_json(obj: Any) -> str:
+    """Deterministic JSON: sorted keys, no whitespace, tuples as lists."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"),
+                      default=_jsonable)
+
+
+def _jsonable(o: Any):
+    if dataclasses.is_dataclass(o) and not isinstance(o, type):
+        return dataclasses.asdict(o)
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    raise TypeError(f"not canonically serializable: {o!r}")
+
+
+def artifact_key(kind: str, spec: Dict, upstream: Sequence[str] = ()) -> str:
+    """sha256 content address of an artifact: kind + upstream digests + spec."""
+    h = hashlib.sha256()
+    h.update(kind.encode())
+    for k in upstream:
+        h.update(b"\x00")
+        h.update(k.encode())
+    h.update(b"\x01")
+    h.update(canonical_json(spec).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Artifact:
+    """Handle to one stored pipeline product (payload lives on disk)."""
+    kind: str
+    key: str
+    path: str                      # directory under the store root
+    spec: Dict                     # resolved config that produced it
+    upstream: List[str]            # keys of consumed artifacts
+
+
+class ArtifactStore:
+    """Content-addressed, kind-partitioned on-disk artifact cache."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+
+    # -- addressing ----------------------------------------------------
+    def path(self, kind: str, key: str) -> str:
+        return os.path.join(self.root, kind, key)
+
+    def resolve(self, kind: str, spec: Dict,
+                upstream: Sequence[str] = ()) -> Artifact:
+        key = artifact_key(kind, spec, upstream)
+        return Artifact(kind, key, self.path(kind, key), dict(spec),
+                        list(upstream))
+
+    def exists(self, artifact: Artifact) -> bool:
+        return os.path.exists(os.path.join(artifact.path, "spec.json"))
+
+    # -- payload IO ----------------------------------------------------
+    def write_json(self, artifact: Artifact, name: str, payload: Any) -> None:
+        os.makedirs(artifact.path, exist_ok=True)
+        with open(os.path.join(artifact.path, name), "w") as f:
+            json.dump(payload, f, indent=1, default=_jsonable)
+
+    def read_json(self, artifact: Artifact, name: str) -> Any:
+        with open(os.path.join(artifact.path, name)) as f:
+            return json.load(f)
+
+    def write_profile(self, artifact: Artifact, profile: Profile) -> None:
+        save_profile(os.path.join(artifact.path, "profile"), profile)
+
+    def read_profile(self, artifact: Artifact) -> Profile:
+        return load_profile(os.path.join(artifact.path, "profile"))
+
+    # -- completion marker --------------------------------------------
+    def commit(self, artifact: Artifact) -> None:
+        """Mark the artifact complete (atomic: spec.json appears last)."""
+        os.makedirs(artifact.path, exist_ok=True)
+        doc = {"kind": artifact.kind, "key": artifact.key,
+               "spec": artifact.spec, "upstream": artifact.upstream}
+        fd, tmp = tempfile.mkstemp(dir=artifact.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(doc, f, indent=1, default=_jsonable)
+            os.replace(tmp, os.path.join(artifact.path, "spec.json"))
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    # -- maintenance ---------------------------------------------------
+    def keys(self, kind: str) -> List[str]:
+        d = os.path.join(self.root, kind)
+        if not os.path.isdir(d):
+            return []
+        return sorted(k for k in os.listdir(d)
+                      if os.path.exists(os.path.join(d, k, "spec.json")))
+
+
+def persist_profile_cli(builder, *, profile_out: Optional[str],
+                        profile_cache: Optional[str],
+                        store: Optional[str], spec: Dict) -> None:
+    """Shared profile-persistence tail for the train/serve launchers.
+
+    ``--profile-cache`` keys on the *step stream* (core-level cache);
+    ``--store`` keys on the *run spec* (pipeline-level ArtifactStore);
+    ``--profile-out`` writes a plain profile directory.
+    """
+    from repro.core.profile_store import cached_finalize
+    if profile_cache:
+        prof, hit = cached_finalize(profile_cache, builder)
+        print("profile cache", "hit" if hit else "miss")
+    else:
+        prof = builder.finalize()
+    if store:
+        s = ArtifactStore(store)
+        art = s.resolve("profile", spec)
+        if not s.exists(art):
+            s.write_profile(art, prof)
+            s.commit(art)
+        print("profile artifact", art.key[:12], "->", art.path)
+    if profile_out:
+        save_profile(profile_out, prof)
+        print("profile saved to", profile_out)

@@ -56,7 +56,7 @@ class ServeEngine:
                  prefill_len: int = 32, seed: int = 0,
                  temperature: float = 0.0, instrument: bool = True,
                  interval_steps: float = 4.0,
-                 defer_analysis: bool = False):
+                 defer_analysis: bool = True):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.batch, self.max_seq, self.prefill_len = batch, max_seq, prefill_len
@@ -79,8 +79,9 @@ class ServeEngine:
                 train=False, unit="flops")
             self.table = merge_tables({"prefill": tp, "decode": td})
             iu = interval_steps * self.table.step_uow("decode")
-            # defer_analysis=True only logs (kind, dyn) per step and runs
-            # the batch analysis once at profile()
+            # defer_analysis=True (the default) only logs (kind, dyn) per
+            # step and runs the vectorized batch analysis once at
+            # profile(); False = legacy per-step replay
             self.builder = IntervalBuilder(self.table, iu,
                                            defer=defer_analysis)
 

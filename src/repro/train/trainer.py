@@ -57,7 +57,7 @@ class Trainer:
                  keep_n: int = 3,
                  straggler_factor: float = 3.0,
                  donate: bool = True,
-                 defer_analysis: bool = False):
+                 defer_analysis: bool = True):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.shape = shape or ShapeConfig("adhoc_train", "train", seq_len, batch)
@@ -81,8 +81,10 @@ class Trainer:
             build_block_table(self.model, self.shape) if instrument else None)
         self.interval_uow = (interval_steps * self.table.step_uow()
                              if self.table else 0.0)
-        # defer_analysis=True only logs steps during training (near-zero
-        # host-side cost per step) and batch-analyzes at profile()
+        # defer_analysis=True (the default) only logs steps during training
+        # (near-zero host-side cost per step) and batch-analyzes at
+        # profile() through the vectorized path; False = legacy per-step
+        # replay inside the training loop
         self.builder = (IntervalBuilder(self.table, self.interval_uow,
                                         defer=defer_analysis)
                         if self.table else None)

@@ -1,0 +1,118 @@
+"""JSON round-trips for every ArtifactStore payload type (load-bearing for
+the pipeline cache: a lossy codec would silently corrupt warm runs), plus
+unit tests of the content-addressed store itself."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.intervals import build_profile
+from repro.core.intervals_vec import as_steps
+from repro.core.nugget import Nugget, create_nuggets
+from repro.core.registry import BlockDef, BlockTable, Segment
+from repro.core.replay import ReplayResult
+from repro.core.select import (KMeansSelector, RandomSelector, Selection,
+                               SystematicSelector)
+from repro.pipeline import ArtifactStore, artifact_key
+
+
+def small_profile():
+    table = BlockTable([BlockDef("a", 10.0), BlockDef("b", 5.0),
+                        BlockDef("v", 0.0, virtual=True, dyn_key="aux")],
+                       [Segment((0, 1), 3)])
+    steps = as_steps(n_steps=12,
+                     dyn_per_step=[{"aux": float(i % 3)} for i in range(12)])
+    return build_profile(table, table.step_uow() * 1.3, steps)
+
+
+def roundtrip(obj, cls):
+    # through an actual JSON string, as the store does — not just dicts
+    return cls.from_json(json.loads(json.dumps(obj.to_json())))
+
+
+@pytest.mark.parametrize("selector", [RandomSelector(n_samples=4, seed=0),
+                                      SystematicSelector(n_samples=4),
+                                      KMeansSelector(seed=0, max_k=4)])
+def test_selection_roundtrip(selector):
+    sel = selector.select(small_profile())
+    sel2 = roundtrip(sel, Selection)
+    assert sel2.method == sel.method
+    assert sel2.interval_ids == sel.interval_ids
+    np.testing.assert_allclose(sel2.weights, sel.weights)
+    if sel.assignment is None:
+        assert sel2.assignment is None
+    else:
+        np.testing.assert_array_equal(sel2.assignment, sel.assignment)
+
+
+def test_nugget_roundtrip():
+    prof = small_profile()
+    sel = RandomSelector(n_samples=4, seed=0).select(prof)
+    nugs = create_nuggets(prof, sel, warmup_intervals=1,
+                          search_distance=0.3 * prof.step_uow, ckpt_every=2)
+    assert nugs
+    for n in nugs:
+        n2 = roundtrip(n, Nugget)
+        assert n2.nugget_id == n.nugget_id
+        assert n2.interval_idx == n.interval_idx
+        assert n2.weight == n.weight
+        assert n2.plan.end == n.plan.end
+        assert n2.plan.start == n.plan.start
+        assert n2.plan.warmup_start == n.plan.warmup_start
+        assert n2.plan.hook_fraction == n.plan.hook_fraction
+        assert n2.plan.precision_loss_uow == n.plan.precision_loss_uow
+        assert (n2.warmup_step, n2.start_step, n2.end_step) == \
+            (n.warmup_step, n.start_step, n.end_step)
+        assert (n2.uow, n2.ckpt_step) == (n.uow, n.ckpt_step)
+
+
+def test_replay_result_roundtrip():
+    r = ReplayResult(nugget_id=3, interval_idx=7, weight=0.25,
+                     region_time_s=0.0123, steps_timed=4, warmup_steps=2,
+                     uow=123.5)
+    assert roundtrip(r, ReplayResult) == r
+
+
+# ---------------------------------------------------------------------------
+# ArtifactStore
+# ---------------------------------------------------------------------------
+
+def test_artifact_key_chains_through_upstream():
+    spec = {"x": 1}
+    k1 = artifact_key("selection", spec, upstream=["aaa"])
+    assert k1 != artifact_key("selection", spec, upstream=["bbb"])
+    assert k1 != artifact_key("selection", {"x": 2}, upstream=["aaa"])
+    assert k1 != artifact_key("nuggets", spec, upstream=["aaa"])
+    assert k1 == artifact_key("selection", {"x": 1}, upstream=["aaa"])
+
+
+def test_artifact_key_canonicalizes_spec():
+    assert artifact_key("profile", {"a": 1, "b": (2, 3)}) == \
+        artifact_key("profile", {"b": [2, 3], "a": 1})
+
+
+def test_store_commit_marks_complete(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = store.resolve("selection", {"selector": "random"}, ["k0"])
+    assert not store.exists(art)
+    store.write_json(art, "selection.json", {"method": "random"})
+    # payload alone is not enough: completeness == spec.json present
+    assert not store.exists(art)
+    store.commit(art)
+    assert store.exists(art)
+    assert store.read_json(art, "selection.json") == {"method": "random"}
+    assert store.keys("selection") == [art.key]
+    # provenance is recorded
+    doc = store.read_json(art, "spec.json")
+    assert doc["upstream"] == ["k0"] and doc["kind"] == "selection"
+
+
+def test_store_profile_payload_roundtrip(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    prof = small_profile()
+    art = store.resolve("profile", {"steps": 12})
+    store.write_profile(art, prof)
+    store.commit(art)
+    loaded = store.read_profile(art)
+    assert loaded.n_intervals == prof.n_intervals
+    np.testing.assert_allclose(loaded.bbv_matrix(), prof.bbv_matrix())

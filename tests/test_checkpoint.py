@@ -68,6 +68,7 @@ def test_partial_write_never_committed(tmp_path, rng_key):
     assert ck.latest_step() == 1
 
 
+@pytest.mark.slow
 def test_resume_matches_uninterrupted(tmp_path, rng_key):
     """checkpoint/restart at step 6 must reproduce the uninterrupted run
     exactly (stateless data cursor + saved rng/opt state)."""

@@ -33,6 +33,7 @@ def test_straggler_strikes_recorded():
     assert any(e["kind"] == "straggler" for e in co.events)
 
 
+@pytest.mark.slow
 def test_fault_injected_training_matches_uninterrupted(tmp_path):
     """Kill the 'fleet' at steps 7 and 13; restart from checkpoints; the
     final params must equal an uninterrupted run bit-for-bit (deterministic

@@ -42,7 +42,19 @@ def test_smoke_forward_shapes_no_nan(arch, rng_key):
             2 * 16 * cfg.moe.top_k * cfg.n_layers
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# the heaviest configs only train-step / decode-check in the slow suite;
+# their forward-shape coverage stays in the default run
+_SLOW_TRAIN_STEP = {"whisper-tiny", "zamba2-1.2b", "llama4-scout-17b-a16e",
+                    "mamba2-780m"}
+_SLOW_DECODE = {"whisper-tiny", "zamba2-1.2b", "llama4-scout-17b-a16e"}
+
+
+def _maybe_slow(archs, slow_set):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in slow_set else a
+            for a in archs]
+
+
+@pytest.mark.parametrize("arch", _maybe_slow(ARCHS, _SLOW_TRAIN_STEP))
 def test_smoke_train_step(arch, rng_key):
     cfg = reduced(get_config(arch))
     m = build_model(cfg)
@@ -61,7 +73,7 @@ def test_smoke_train_step(arch, rng_key):
     assert delta > 0
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _maybe_slow(ARCHS, _SLOW_DECODE))
 def test_prefill_decode_matches_forward(arch, rng_key):
     cfg = reduced(get_config(arch))
     if cfg.moe:
@@ -83,6 +95,7 @@ def test_prefill_decode_matches_forward(arch, rng_key):
     assert max(errs) < 2e-4, errs
 
 
+@pytest.mark.slow
 def test_microbatch_equals_full_batch(rng_key):
     """Gradient accumulation must match the single-shot step numerically."""
     cfg = reduced(get_config("qwen3-1.7b"))

@@ -73,6 +73,7 @@ def test_parallel_block_train_and_decode_agree(base):
     assert max(err) < 2e-4
 
 
+@pytest.mark.slow
 def test_remat_group_exact(base):
     cfg, m, params, batch = base
     assert cfg.n_layers % 2 == 0

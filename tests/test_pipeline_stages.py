@@ -1,0 +1,80 @@
+"""End-to-end behaviour of the artifact pipeline (ISSUE 7 tentpole):
+cold run computes every stage, warm run hits the cache on every stage,
+and changing only the selector re-runs selection + downstream while the
+profile and baseline artifacts are reused."""
+import dataclasses
+
+import pytest
+
+from repro.pipeline import Pipeline, PipelineConfig
+
+CFG = PipelineConfig(arch="olmoe-1b-7b", platforms=("f32",),
+                     selector="random",
+                     selector_args={"n_samples": 3, "seed": 0},
+                     steps=8, seq_len=16, batch=2, interval_steps=2.0,
+                     seed=0)
+
+STAGE_NAMES = ["profile", "select", "mark", "baseline@f32", "replay@f32",
+               "validate"]
+
+
+@pytest.fixture(scope="module")
+def store(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("artifact-store"))
+
+
+@pytest.fixture(scope="module")
+def cold(store):
+    return Pipeline(CFG, store).run()
+
+
+def hits(manifest):
+    return {s["stage"]: s["cache_hit"] for s in manifest["stages"]}
+
+
+def test_cold_run_computes_every_stage(cold):
+    assert [s["stage"] for s in cold["stages"]] == STAGE_NAMES
+    assert cold["cache_hits"] == 0
+    assert cold["cache_misses"] == len(STAGE_NAMES)
+    m = cold["metrics"]
+    assert "f32" in m["platforms"]
+    assert m["platforms"]["f32"]["actual_s"] > 0
+    assert m["platforms"]["f32"]["predicted_s"] > 0
+    assert len(m["nugget_variability"]) == 3
+    # single platform: no speedup pairs, but consistency is still populated
+    assert m["speedup_errors"] == []
+    assert all(s["wall_s"] >= 0 for s in cold["stages"])
+
+
+def test_warm_run_hits_every_stage(store, cold):
+    warm = Pipeline(CFG, store).run()
+    assert all(hits(warm).values()), hits(warm)
+    # identical inputs -> identical content addresses
+    assert [s["key"] for s in warm["stages"]] == \
+        [s["key"] for s in cold["stages"]]
+    # the cached validation payload round-trips losslessly
+    assert warm["metrics"] == cold["metrics"]
+
+
+def test_selector_change_reuses_profile_and_baseline(store, cold):
+    cfg = dataclasses.replace(CFG, selector="systematic",
+                              selector_args={"n_samples": 3})
+    m = Pipeline(cfg, store).run()
+    h = hits(m)
+    assert h["profile"] and h["baseline@f32"], h
+    assert not h["select"] and not h["mark"], h
+    assert not h["replay@f32"] and not h["validate"], h
+    # profile artifact is the same object, selection is a new one
+    keys = {s["stage"]: s["key"] for s in m["stages"]}
+    cold_keys = {s["stage"]: s["key"] for s in cold["stages"]}
+    assert keys["profile"] == cold_keys["profile"]
+    assert keys["select"] != cold_keys["select"]
+
+
+def test_interval_change_invalidates_profile(store, cold):
+    cfg = dataclasses.replace(CFG, interval_steps=3.0)
+    m = Pipeline(cfg, store).run()
+    h = hits(m)
+    assert not h["profile"], h
+    # baselines do not depend on the interval size
+    assert h["baseline@f32"], h

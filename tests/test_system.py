@@ -31,6 +31,7 @@ def trained(tmp_path_factory):
     return tr
 
 
+@pytest.mark.slow
 def test_pipeline_end_to_end(trained, tmp_path):
     tr = trained
     prof = tr.profile()
@@ -91,6 +92,7 @@ def test_meter_matches_host_builder(trained):
     assert int(m["uow"]) == int(round(table.step_uow()))
 
 
+@pytest.mark.slow
 def test_cross_platform_consistency(trained):
     """Two 'platforms' (instrumented vs plain step programs) — §V-A
     consistency analysis machinery."""
