@@ -3,16 +3,87 @@ total block executions — plus the low-overhead marker search's effect.
 
 The paper's cutoff guidance: markers executing >10%% (single-stream) of all
 block executions distort validation.  We report the fraction for the true
-end marker vs the searched low-overhead marker and the precision cost."""
+end marker vs the searched low-overhead marker and the precision cost.
+
+This suite also enforces the ``repro.obs`` overhead budget: with tracing
+disabled (the default), the per-step observability calls the Trainer makes
+(one disabled span check plus a counter/gauge/histogram bundle per step)
+must cost under 2 percent of a median training step.  The per-call costs
+are micro-benchmarked and compared against the measured step time; breach
+raises, failing the harness."""
 from __future__ import annotations
 
+import time
 from typing import List
 
+import numpy as np
+
 from benchmarks.common import Row
+from repro import obs
 from repro.configs import get_config, reduced
 from repro.core import (RandomSelector, create_nuggets, marker_hook_fraction,
                         plan_markers)
 from repro.train import Trainer
+
+OBS_BUDGET_FRACTION = 0.02      # disabled-path obs cost per step, max
+
+# what Trainer._post_step does per step: 1 counter inc, 1 histogram
+# observation, 2 gauge writes — plus one disabled span() check to cover
+# span-wrapped hot loops
+OBS_CALLS_PER_STEP = {"count": 1, "observe": 1, "record": 2, "span": 1}
+
+
+def _per_call_ns(fn, n: int = 20_000) -> float:
+    for _ in range(n // 10):                 # warmup
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e9
+
+
+def obs_disabled_costs() -> dict:
+    """Nanoseconds per disabled-path obs call, micro-benchmarked."""
+    obs.configure(trace=False)
+    m = obs.metrics()
+
+    def spanned():
+        with obs.span("bench.noop"):
+            pass
+
+    costs = {
+        "span": _per_call_ns(spanned),
+        "count": _per_call_ns(lambda: m.count("bench.noop_c")),
+        "observe": _per_call_ns(lambda: m.observe("bench.noop_h", 1.0)),
+        "record": _per_call_ns(lambda: m.record("bench.noop_g", 1.0)),
+    }
+    return costs
+
+
+def obs_overhead_rows(step_s: float) -> List[Row]:
+    """Budget rows + the <2%% gate against a measured step time."""
+    costs = obs_disabled_costs()
+    per_step_ns = sum(costs[k] * n for k, n in OBS_CALLS_PER_STEP.items())
+    frac = per_step_ns * 1e-9 / max(step_s, 1e-12)
+    rows: List[Row] = [
+        ("hook_overhead/obs_disabled_span", costs["span"] / 1e3,
+         f"ns_per_call={costs['span']:.0f}"),
+        ("hook_overhead/obs_disabled_metrics", sum(
+            costs[k] * n for k, n in OBS_CALLS_PER_STEP.items()
+            if k != "span") / 1e3,
+         "ns_per_step_bundle={:.0f}".format(sum(
+             costs[k] * n for k, n in OBS_CALLS_PER_STEP.items()
+             if k != "span"))),
+        ("hook_overhead/obs_step_fraction", frac * 1e6,
+         f"frac={frac:.2e};budget={OBS_BUDGET_FRACTION};"
+         f"step_ms={step_s * 1e3:.2f}"),
+    ]
+    if frac >= OBS_BUDGET_FRACTION:
+        raise RuntimeError(
+            f"obs disabled-path overhead {frac:.2%} of a training step "
+            f"breaches the {OBS_BUDGET_FRACTION:.0%} budget "
+            f"(per-step obs cost {per_step_ns:.0f}ns, step {step_s:.4f}s)")
+    return rows
 
 
 def run() -> List[Row]:
@@ -38,4 +109,7 @@ def run() -> List[Row]:
             f"frac={cheap.hook_fraction:.4f};"
             f"precision_loss_uow={cheap.precision_loss_uow:.0f};"
             f"block={prof.table.names[cheap.end.block]}"))
+    # steady-state step time (skip the compile step) anchors the obs budget
+    step_s = float(np.median(tr.step_times[1:]))
+    rows.extend(obs_overhead_rows(step_s))
     return rows

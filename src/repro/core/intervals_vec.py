@@ -45,10 +45,12 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import os
+import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.registry import BlockTable
 
 # one profiled step: (step kind, optional dynamic aux dict)
@@ -112,7 +114,31 @@ def analyze_steps(table: BlockTable, interval_uow: float,
     stream (global counter, step index and per-block cumulative hit counts
     at the start of the run).  ``expand`` overrides the per-kind stream
     lookup (the IntervalBuilder passes its per-builder memo).
+
+    Each batch is timed into the ``intervals.*`` metrics (steps analyzed,
+    intervals closed, batch seconds, intervals/s) and traced as an
+    ``intervals.analyze_batch`` span when tracing is on.
     """
+    t_an0 = _time.perf_counter()
+    with obs.span("intervals.analyze_batch", steps=len(steps)) as _sp:
+        res = _analyze_steps(table, interval_uow, steps, g0=g0, step0=step0,
+                             baseline_hits=baseline_hits, expand=expand)
+        n_cl = len(res.end_uow)
+        _sp.set(closed=n_cl)
+    dt = _time.perf_counter() - t_an0
+    m = obs.metrics()
+    m.count("intervals.analyzed_steps", len(steps))
+    m.count("intervals.closed", n_cl)
+    m.observe("intervals.analyze_s", dt)
+    if n_cl:
+        m.record("intervals.per_s", n_cl / max(dt, 1e-9))
+    return res
+
+
+def _analyze_steps(table: BlockTable, interval_uow: float,
+                   steps: Sequence[Step], *, g0: float = 0.0, step0: int = 0,
+                   baseline_hits: Optional[np.ndarray] = None,
+                   expand: Optional[Callable] = None) -> ChunkResult:
     n = table.n_blocks
     if baseline_hits is None:
         baseline_hits = np.zeros(n, np.int64)

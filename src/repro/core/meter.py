@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.registry import BlockTable
 
 
@@ -64,8 +65,18 @@ def meter_psum(meter: Dict[str, jax.Array], axis_name: str):
 
 
 def read_meter(meter) -> Dict[str, np.ndarray]:
+    """Host-side readback of the device meter.  Each readback publishes the
+    unit-of-work totals to the ``meter.*`` gauges (one gauge write per
+    readback, not per step — readbacks are how UoW leaves the device)."""
+    uow = meter_value(meter)
+    steps = int(meter["steps"])
+    m = obs.metrics()
+    m.record("meter.uow_total", float(uow))
+    m.record("meter.steps", steps)
+    if steps:
+        m.record("meter.uow_per_step", uow / steps)
     return {
-        "uow": np.uint64(meter_value(meter)),
+        "uow": np.uint64(uow),
         "counts": np.asarray(meter["counts"]),
-        "steps": int(meter["steps"]),
+        "steps": steps,
     }

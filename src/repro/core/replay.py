@@ -19,6 +19,7 @@ from typing import Any, Callable, Dict, List, Optional, Protocol
 
 import numpy as np
 
+from repro import obs
 from repro.core.intervals import Profile
 from repro.core.nugget import Nugget
 
@@ -88,6 +89,15 @@ class ReplayEngine:
         self._compiled = True
 
     def replay(self, nugget: Nugget) -> ReplayResult:
+        with obs.span("replay.nugget", nugget=nugget.nugget_id,
+                      interval=nugget.interval_idx):
+            result = self._replay(nugget)
+        m = obs.metrics()
+        m.count("replay.nuggets")
+        m.observe("replay.region_s", result.region_time_s)
+        return result
+
+    def _replay(self, nugget: Nugget) -> ReplayResult:
         self.warm_compile()
         first_step = int(math.floor(nugget.start_step))
         last_step = int(math.ceil(nugget.end_step)) - 1

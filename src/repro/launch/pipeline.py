@@ -7,16 +7,24 @@ Re-running with the same flags hits the cache for every stage; changing
 only ``--selector`` re-runs selection and downstream stages while the
 profile and baseline artifacts are reused.
 
+With ``--trace DIR`` the run is traced end to end: ``DIR/trace.json`` is a
+Chrome-trace/Perfetto file (one span per stage, load it at
+https://ui.perfetto.dev), ``DIR/trace.jsonl`` the raw event stream and
+``DIR/metrics.json`` the metrics snapshot that is also embedded in the
+manifest's ``obs`` block.  Summarize later with
+``python -m repro.launch.obs DIR``.
+
 Examples:
     PYTHONPATH=src python -m repro.launch.pipeline --arch olmoe-1b-7b \
         --reduced --steps 16 --selector kmeans --platforms f32,bf16 \
-        --store /tmp/artifacts --manifest-out /tmp/manifest.json
+        --store /tmp/artifacts --manifest-out /tmp/manifest.json \
+        --trace /tmp/run-trace
 """
 from __future__ import annotations
 
 import argparse
 import json
-import logging
+import os
 
 
 def build_config(args) -> "PipelineConfig":
@@ -80,17 +88,40 @@ def main():
                     help="content-addressed artifact store root")
     ap.add_argument("--manifest-out",
                     help="also write the run manifest JSON to this path")
+    ap.add_argument("--trace", metavar="DIR",
+                    help="trace the run: write Chrome-trace trace.json, "
+                         "raw trace.jsonl and metrics.json under DIR")
+    ap.add_argument("--report", action="store_true",
+                    help="print the human metrics table after the run")
     args = ap.parse_args()
-    logging.basicConfig(level=logging.WARNING)
+
+    from repro import obs
+    obs.log.setup()
+    if args.trace:
+        obs.configure(trace=True, trace_dir=args.trace)
+    else:
+        obs.configure_from_env()
 
     from repro.pipeline import Pipeline
 
     manifest = Pipeline(build_config(args), args.store).run()
+    if args.trace:
+        tr = obs.tracer()
+        trace_json = tr.write_chrome(os.path.join(args.trace, "trace.json"))
+        obs.metrics().write_json(os.path.join(args.trace, "metrics.json"))
+        tr.close()
+        manifest["obs"]["trace_json"] = trace_json
+        obs.log.kv("trace_written", logger="launch.pipeline",
+                   path=trace_json, events=len(tr.events()))
     out = json.dumps(manifest, indent=1, default=str)
     print(out)
     if args.manifest_out:
         with open(args.manifest_out, "w") as f:
             f.write(out)
+        obs.log.kv("manifest_written", logger="launch.pipeline",
+                   path=args.manifest_out)
+    if args.report:
+        print(obs.metrics().report())
 
 
 if __name__ == "__main__":

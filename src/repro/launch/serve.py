@@ -34,6 +34,10 @@ def main():
 
     import jax
 
+    from repro import obs
+    obs.log.setup()                       # key=value lines, REPRO_LOG_LEVEL
+    obs.configure_from_env()              # spans if REPRO_TRACE is set
+
     from repro.configs import get_config, reduced
     from repro.models.model_zoo import build_model
     from repro.serve import ServeEngine, SyntheticRequests

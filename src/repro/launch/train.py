@@ -8,8 +8,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import logging
-import os
 
 
 def main():
@@ -41,8 +39,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
-    logging.basicConfig(level=logging.INFO,
-                        format="%(asctime)s %(name)s %(message)s")
+
+    from repro import obs
+    obs.log.setup()                       # key=value lines, REPRO_LOG_LEVEL
+    obs.configure_from_env()              # spans if REPRO_TRACE is set
 
     from repro.configs import get_config, reduced
     from repro.optim.adamw import AdamWConfig

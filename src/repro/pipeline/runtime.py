@@ -13,6 +13,7 @@ import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence, Union
 
+from repro import obs
 from repro.configs import get_config, reduced
 from repro.configs.base import ArchConfig
 from repro.pipeline.stages import (BaselineStage, MarkStage, ProfileStage,
@@ -143,11 +144,19 @@ class Pipeline:
         return out
 
     def run(self) -> Dict:
-        """Run every stage (cache-aware) and return the run manifest."""
+        """Run every stage (cache-aware) and return the run manifest.
+
+        The manifest embeds an ``obs`` block: the process metrics snapshot
+        (store hit/miss/bytes, per-stage wall-time histograms, trainer and
+        analyzer metrics) plus whether tracing was live for the run.
+        """
         ctx = PipelineContext(self.cfg, self.store)
         t0 = time.perf_counter()
-        for stage in self.stages():
-            stage.run(ctx)
+        with obs.span("pipeline.run", arch=self.cfg.arch,
+                      platforms=list(self.cfg.platforms),
+                      selector=self.cfg.selector):
+            for stage in self.stages():
+                stage.run(ctx)
         hits = sum(1 for s in ctx.manifest if s["cache_hit"])
         return {
             "config": dataclasses.asdict(self.cfg),
@@ -157,4 +166,7 @@ class Pipeline:
             "cache_hits": hits,
             "cache_misses": len(ctx.manifest) - hits,
             "wall_s": time.perf_counter() - t0,
+            "obs": {"traced": obs.enabled(),
+                    "store_counters": dict(self.store.counters),
+                    "metrics": obs.metrics().snapshot()},
         }

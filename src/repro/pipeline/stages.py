@@ -20,6 +20,7 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, List
 
+from repro import obs
 from repro.core.nugget import Nugget, create_nuggets
 from repro.core.replay import ReplayEngine, ReplayResult
 from repro.core.select import SELECTORS, Selection
@@ -53,15 +54,25 @@ class Stage:
     # -- uniform driver ------------------------------------------------
     def run(self, ctx) -> Artifact:
         t0 = time.perf_counter()
-        art = ctx.store.resolve(self.kind, self.spec(ctx), self.upstream(ctx))
-        hit = ctx.store.exists(art)
-        if hit:
-            payload = self.load(ctx.store, art)
-        else:
-            payload = self.compute(ctx)
-            self.save(ctx.store, art, payload)
-            ctx.store.commit(art)
-        ctx.record(self, art, payload, hit, time.perf_counter() - t0)
+        with obs.span(f"stage.{self.name}", kind=self.kind) as sp:
+            art = ctx.store.resolve(self.kind, self.spec(ctx),
+                                    self.upstream(ctx))
+            hit = ctx.store.exists(art)
+            if hit:
+                with obs.span(f"stage.{self.name}.load"):
+                    payload = self.load(ctx.store, art)
+            else:
+                with obs.span(f"stage.{self.name}.compute"):
+                    payload = self.compute(ctx)
+                with obs.span(f"stage.{self.name}.save"):
+                    self.save(ctx.store, art, payload)
+                    ctx.store.commit(art)
+            sp.set(key=art.key, cache_hit=hit,
+                   upstream=[k[:12] for k in art.upstream])
+        wall = time.perf_counter() - t0
+        obs.metrics().observe(f"pipeline.stage_s.{self.kind}", wall)
+        obs.metrics().count(f"pipeline.{'hits' if hit else 'misses'}")
+        ctx.record(self, art, payload, hit, wall)
         return art
 
 

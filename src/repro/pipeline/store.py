@@ -29,6 +29,7 @@ import os
 import tempfile
 from typing import Any, Dict, List, Optional, Sequence
 
+from repro import obs
 from repro.core.intervals import Profile
 from repro.core.profile_store import load_profile, save_profile
 
@@ -77,6 +78,9 @@ class ArtifactStore:
 
     def __init__(self, root: str):
         self.root = str(root)
+        # per-instance cache accounting, mirrored into the process
+        # MetricsRegistry (store.hit / store.miss / store.put_bytes)
+        self.counters = {"hit": 0, "miss": 0, "put_bytes": 0}
 
     # -- addressing ----------------------------------------------------
     def path(self, kind: str, key: str) -> str:
@@ -89,7 +93,13 @@ class ArtifactStore:
                         list(upstream))
 
     def exists(self, artifact: Artifact) -> bool:
-        return os.path.exists(os.path.join(artifact.path, "spec.json"))
+        hit = os.path.exists(os.path.join(artifact.path, "spec.json"))
+        self.counters["hit" if hit else "miss"] += 1
+        obs.metrics().count(f"store.{'hit' if hit else 'miss'}")
+        if obs.enabled():
+            obs.event("store.lookup", kind=artifact.kind,
+                      key=artifact.key[:12], hit=hit)
+        return hit
 
     # -- payload IO ----------------------------------------------------
     def write_json(self, artifact: Artifact, name: str, payload: Any) -> None:
@@ -121,6 +131,12 @@ class ArtifactStore:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
+        nbytes = sum(os.path.getsize(os.path.join(d, f))
+                     for d, _, files in os.walk(artifact.path)
+                     for f in files)
+        self.counters["put_bytes"] += nbytes
+        obs.metrics().count("store.put_bytes", nbytes)
+        obs.metrics().count("store.put")
 
     # -- maintenance ---------------------------------------------------
     def keys(self, kind: str) -> List[str]:
@@ -143,7 +159,8 @@ def persist_profile_cli(builder, *, profile_out: Optional[str],
     from repro.core.profile_store import cached_finalize
     if profile_cache:
         prof, hit = cached_finalize(profile_cache, builder)
-        print("profile cache", "hit" if hit else "miss")
+        obs.log.kv("profile_cache", logger="pipeline",
+                   hit=hit, path=profile_cache)
     else:
         prof = builder.finalize()
     if store:
@@ -152,7 +169,8 @@ def persist_profile_cli(builder, *, profile_out: Optional[str],
         if not s.exists(art):
             s.write_profile(art, prof)
             s.commit(art)
-        print("profile artifact", art.key[:12], "->", art.path)
+        obs.log.kv("profile_artifact", logger="pipeline",
+                   key=art.key[:12], path=art.path)
     if profile_out:
         save_profile(profile_out, prof)
-        print("profile saved to", profile_out)
+        obs.log.kv("profile_saved", logger="pipeline", path=profile_out)

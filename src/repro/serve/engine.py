@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.blocks_lm import build_block_table
 from repro.core.intervals import IntervalBuilder, Profile
@@ -135,6 +136,7 @@ class ServeEngine:
             self.builder.add_step(kind="prefill")
         self.kinds_log.append("prefill")
         self.iterations += 1
+        obs.metrics().count("serve.prefill_iters")
 
     def _decode_all(self):
         self.rng, sub = jax.random.split(self.rng)
@@ -162,6 +164,7 @@ class ServeEngine:
             self.builder.add_step(kind="decode")
         self.kinds_log.append("decode")
         self.iterations += 1
+        obs.metrics().count("serve.decode_iters")
 
     # ------------------------------------------------------------------
     def step(self, params) -> bool:
@@ -180,13 +183,20 @@ class ServeEngine:
         for r in requests:
             self.submit(r)
         t0 = time.perf_counter()
-        while self.step(params):
-            pass
-        jax.block_until_ready(self.last_token)
+        with obs.span("serve.run", requests=len(requests)):
+            while self.step(params):
+                pass
+            jax.block_until_ready(self.last_token)
         wall = time.perf_counter() - t0
         toks = sum(len(r.output or []) for r in self.done)
         lat = [r.finished_at - r.submitted_at for r in self.done
                if r.finished_at]
+        m = obs.metrics()
+        m.count("serve.requests", len(self.done))
+        m.count("serve.tokens", toks)
+        m.record("serve.tokens_per_s", toks / max(wall, 1e-9))
+        for v in lat:
+            m.observe("serve.latency_s", v)
         return {
             "wall_s": wall,
             "tokens": toks,
@@ -199,7 +209,8 @@ class ServeEngine:
     # ------------------------------------------------------------------
     def profile(self) -> Profile:
         assert self.builder is not None
-        return self.builder.finalize()
+        with obs.span("serve.profile_finalize"):
+            return self.builder.finalize()
 
     def snapshot(self) -> Dict[str, Any]:
         """Host-memory engine state (elastic migration / replay resets)."""

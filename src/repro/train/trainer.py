@@ -14,12 +14,14 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.blocks_lm import build_block_table
@@ -57,7 +59,8 @@ class Trainer:
                  keep_n: int = 3,
                  straggler_factor: float = 3.0,
                  donate: bool = True,
-                 defer_analysis: bool = True):
+                 defer_analysis: bool = True,
+                 history_cap: int = 1024):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.shape = shape or ShapeConfig("adhoc_train", "train", seq_len, batch)
@@ -105,7 +108,11 @@ class Trainer:
         self.ckpt_every = ckpt_every
         self.step_times: List[float] = []
         self.slow_steps: List[int] = []
-        self.metrics_history: List[Dict[str, float]] = []
+        # bounded recent-step window (long runs used to grow without limit);
+        # full-run aggregates live in the repro.obs MetricsRegistry
+        self.metrics_history: Deque[Dict[str, float]] = \
+            deque(maxlen=max(history_cap, 1))
+        self._tokens_per_step = self.shape.tokens
 
     # ------------------------------------------------------------------
     def init_state(self) -> TrainState:
@@ -126,21 +133,22 @@ class Trainer:
                     state, extra = self.ckpt.restore(state)
                     log.info("resumed from step %s", latest)
         start = int(state.step)
-        for s in range(start, n_steps):
-            batch = self._device_batch(s)
-            t0 = time.perf_counter()
-            state, metrics, aux = self._step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            self._post_step(s, dt, metrics, aux)
-            if (self.ckpt is not None and self.ckpt_every
-                    and (s + 1) % self.ckpt_every == 0):
-                self.ckpt.save(s + 1, state)
-            if log_every and (s + 1) % log_every == 0:
-                log.info("step %d loss %.4f (%.0f ms)", s + 1,
-                         float(metrics["loss"]), dt * 1e3)
-        if self.ckpt is not None:
-            self.ckpt.wait()
+        with obs.span("train.run", start=start, steps=n_steps):
+            for s in range(start, n_steps):
+                batch = self._device_batch(s)
+                t0 = time.perf_counter()
+                state, metrics, aux = self._step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self._post_step(s, dt, metrics, aux)
+                if (self.ckpt is not None and self.ckpt_every
+                        and (s + 1) % self.ckpt_every == 0):
+                    self.ckpt.save(s + 1, state)
+                if log_every and (s + 1) % log_every == 0:
+                    log.info("step %d loss %.4f (%.0f ms)", s + 1,
+                             float(metrics["loss"]), dt * 1e3)
+            if self.ckpt is not None:
+                self.ckpt.wait()
         return state
 
     def _post_step(self, step: int, dt: float, metrics, aux) -> None:
@@ -148,10 +156,16 @@ class Trainer:
         med = float(np.median(self.step_times[-50:]))
         if len(self.step_times) > 5 and dt > self.straggler_factor * med:
             self.slow_steps.append(step)
+            obs.metrics().count("train.stragglers")
             log.warning("straggler: step %d took %.0f ms (median %.0f ms)",
                         step, dt * 1e3, med * 1e3)
-        self.metrics_history.append(
-            {k: float(v) for k, v in metrics.items()})
+        row = {k: float(v) for k, v in metrics.items()}
+        self.metrics_history.append(row)
+        m = obs.metrics()
+        m.count("train.steps")
+        m.observe("train.step_s", dt)
+        m.record("train.loss", row.get("loss", 0.0))
+        m.record("train.tokens_per_s", self._tokens_per_step / max(dt, 1e-9))
         if self.builder is not None:
             dyn = {}
             for k in ("expert_tokens", "dropped_tokens"):
@@ -162,7 +176,8 @@ class Trainer:
     # ------------------------------------------------------------------
     def profile(self) -> Profile:
         assert self.builder is not None, "instrumentation disabled"
-        return self.builder.finalize()
+        with obs.span("train.profile_finalize"):
+            return self.builder.finalize()
 
     def watchdog_report(self) -> WatchdogReport:
         return WatchdogReport(self.slow_steps, self.step_times)

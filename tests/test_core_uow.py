@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.meter import _add64, init_meter, meter_value, tick_step
+from repro.core.meter import (_add64, init_meter, meter_value, read_meter,
+                              tick_step)
 from repro.core.registry import BlockDef, BlockTable, Segment
 from repro.core.unit_of_work import jaxpr_cost, trace_cost
 
@@ -57,6 +58,55 @@ def test_add64_two_limb(a, b):
     hi = jnp.uint32(a >> 32)
     nlo, nhi = _add64(lo, hi, b)
     assert (int(nhi) << 32 | int(nlo)) == a + b
+
+
+def _split64(v: int):
+    return jnp.uint32(v & 0xFFFFFFFF), jnp.uint32(v >> 32)
+
+
+@pytest.mark.parametrize("start,amount", [
+    (2**32 - 1, 1),                  # lo rolls over exactly at the boundary
+    (2**32 - 1, 2**32 - 1),          # max lo + max 32-bit amount
+    (2**32, 1),                      # already past the boundary: no carry
+    (2**33 - 1, 1),                  # carry with hi already nonzero
+    (0, 2**32),                      # amount's own hi limb, zero low half
+    (0, 2**32 + 5),                  # amount hi limb + nonzero low half
+    (2**32 - 3, 2**34 + 7),          # carry AND amount hi limb together
+    (0, 0),                          # degenerate no-op
+])
+def test_add64_carry_at_2_32_boundary(start, amount):
+    lo, hi = _split64(start)
+    nlo, nhi = _add64(lo, hi, amount)
+    got = (int(nhi) << 32) | int(nlo)
+    assert got == start + amount, (start, amount, got)
+
+
+def test_meter_value_round_trips_two_limbs():
+    for v in (0, 1, 2**32 - 1, 2**32, 2**32 + 1, (1 << 40) + 12345,
+              (1 << 48) - 1):
+        lo, hi = _split64(v)
+        meter = {"uow_lo": lo, "uow_hi": hi,
+                 "counts": jnp.zeros((1,), jnp.int32),
+                 "steps": jnp.zeros((), jnp.int32)}
+        assert meter_value(meter) == v
+
+
+def test_tick_step_accumulates_across_2_32_overflow():
+    """Repeated ticks whose per-step UoW pushes the two-limb counter past
+    2**32 must agree with exact Python integer accumulation."""
+    big = float(3_000_000_000)                        # ~0.7 * 2**32 per step
+    table = BlockTable([BlockDef("a", big)], [Segment((0,), 1)])
+    meter = init_meter(table)
+    expect = 0
+    per_step = int(round(table.step_uow()))
+    for s in range(3):                                # crosses 2**32 twice
+        meter = tick_step(meter, table)
+        expect += per_step
+        assert meter_value(meter) == expect
+    assert expect > 2**32                             # overflow path exercised
+    assert int(meter["uow_hi"]) >= 1
+    rd = read_meter(meter)
+    assert int(rd["uow"]) == expect and rd["steps"] == 3
 
 
 def test_meter_accumulates_and_overflows_32bit():

@@ -78,3 +78,50 @@ def test_interval_change_invalidates_profile(store, cold):
     assert not h["profile"], h
     # baselines do not depend on the interval size
     assert h["baseline@f32"], h
+
+
+def test_store_counters_cold_misses_warm_hits(store, cold):
+    """ArtifactStore cache accounting (ISSUE 8): a cold run is all misses
+    (every artifact is written), a warm run is all hits (nothing written)."""
+    sc = cold["obs"]["store_counters"]
+    assert sc["miss"] == len(STAGE_NAMES) and sc["hit"] == 0, sc
+    assert sc["put_bytes"] > 0
+    warm = Pipeline(CFG, store).run()
+    sw = warm["obs"]["store_counters"]
+    assert sw["hit"] == len(STAGE_NAMES) and sw["miss"] == 0, sw
+    assert sw["put_bytes"] == 0              # pure cache hits write nothing
+
+
+def test_manifest_embeds_metrics_snapshot(store, cold):
+    ob = cold["obs"]
+    assert "metrics" in ob and isinstance(ob["metrics"], dict)
+    # the snapshot is plain JSON (the manifest is dumped as-is)
+    import json
+    json.dumps(ob["metrics"])
+    snap = ob["metrics"]
+    assert snap["store.miss"]["value"] >= len(STAGE_NAMES)
+    assert "pipeline.stage_s.profile" in snap
+
+
+def test_traced_warm_run_emits_one_span_per_stage(store, cold):
+    """With tracing on, a pipeline run produces a ``stage.<name>`` span per
+    stage (cache-hit attribute set) inside a ``pipeline.run`` root span,
+    and the buffer exports as a valid Chrome trace."""
+    from repro import obs
+    tracer = obs.configure(trace=True)
+    try:
+        m = Pipeline(CFG, store).run()
+    finally:
+        obs.configure(trace=False)
+    assert m["obs"]["traced"]
+    spans = [e for e in tracer.events() if e["ph"] == "X"]
+    by_name = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(e)
+    for name in STAGE_NAMES:
+        (ev,) = by_name[f"stage.{name}"]
+        assert ev["args"]["cache_hit"] is True
+        assert ev["args"]["key"]          # artifact digest travels on the span
+    assert len(by_name["pipeline.run"]) == 1
+    doc = tracer.chrome_trace()
+    assert {e["ph"] for e in doc["traceEvents"]} <= {"M", "X", "i"}
