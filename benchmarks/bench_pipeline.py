@@ -1,12 +1,25 @@
 """Pipeline-stage wall times + cache behaviour (run-manifest trajectory).
 
-Runs the artifact pipeline twice against one store on a reduced config:
-the cold pass measures per-stage compute cost, the warm pass measures
-cache-load cost and must hit on every stage.  ``run.py`` appends the
-summary (``LAST_ENTRY``) to ``BENCH_pipeline.json`` so perf history
+Runs the artifact pipeline three times on a reduced config: a serial cold
+pass (per-stage compute cost), a warm pass against the same store (cache-
+load cost, must hit on every stage), and a parallel cold pass against a
+fresh store with the DAG scheduler at ``PARALLEL_WORKERS`` threads.  The
+parallel pass must reproduce the serial stage keys exactly — the artifact
+addresses are input-addressed, so any divergence is a determinism bug.
+
+The parallel speedup comes from overlapping independent stages (profile
+and the per-platform baselines have no edges between them, and their cost
+is dominated by XLA compilation + step execution, which release the GIL),
+so it scales with the host's core count: on a single-core host wall time
+is conserved (speedup ~1x); with >=2 cores the profile/baseline overlap
+alone bounds it near ``total / max(profile, baselines)``.  ``host_cpus``
+is recorded alongside the speedup so trajectory entries are comparable.
+``run.py`` appends the summary (``LAST_ENTRY``, including
+``parallel_speedup_x``) to ``BENCH_pipeline.json`` so perf history
 accumulates across benchmark invocations."""
 from __future__ import annotations
 
+import os
 import tempfile
 from typing import Dict, List, Optional
 
@@ -14,6 +27,7 @@ from benchmarks.common import Row
 from repro.pipeline import Pipeline, PipelineConfig
 
 N_STEPS = 16
+PARALLEL_WORKERS = 4
 
 # summary of the most recent run() for the BENCH_pipeline.json trajectory
 LAST_ENTRY: Optional[Dict] = None
@@ -22,6 +36,7 @@ LAST_ENTRY: Optional[Dict] = None
 def _summary(manifest: Dict) -> Dict:
     return {
         "wall_s": manifest["wall_s"],
+        "workers": manifest.get("workers", 0),
         "cache_hits": manifest["cache_hits"],
         "cache_misses": manifest["cache_misses"],
         "stage_wall_s": {s["stage"]: s["wall_s"]
@@ -31,25 +46,42 @@ def _summary(manifest: Dict) -> Dict:
     }
 
 
+def _cfg(workers: int = 0) -> PipelineConfig:
+    return PipelineConfig(arch="olmoe-1b-7b", platforms=("f32",),
+                          selector="random",
+                          selector_args={"n_samples": 4, "seed": 0},
+                          steps=N_STEPS, seq_len=32, batch=2,
+                          interval_steps=2.0, seed=0, workers=workers)
+
+
 def run() -> List[Row]:
     global LAST_ENTRY
     rows: List[Row] = []
     with tempfile.TemporaryDirectory(prefix="bench-pipe-") as store:
-        cfg = PipelineConfig(arch="olmoe-1b-7b", platforms=("f32",),
-                             selector="random",
-                             selector_args={"n_samples": 4, "seed": 0},
-                             steps=N_STEPS, seq_len=32, batch=2,
-                             interval_steps=2.0, seed=0)
-        cold = Pipeline(cfg, store).run()
-        warm = Pipeline(cfg, store).run()
+        cold = Pipeline(_cfg(), store).run()
+        warm = Pipeline(_cfg(), store).run()
+    with tempfile.TemporaryDirectory(prefix="bench-pipe-par-") as store:
+        par = Pipeline(_cfg(PARALLEL_WORKERS), store).run()
     assert warm["cache_misses"] == 0, \
         f"warm pipeline re-ran stages: {warm['stages']}"
-    for label, manifest in (("cold", cold), ("warm", warm)):
+    serial_keys = {s["stage"]: s["key"] for s in cold["stages"]}
+    par_keys = {s["stage"]: s["key"] for s in par["stages"]}
+    assert serial_keys == par_keys, \
+        f"parallel run diverged from serial: {serial_keys} != {par_keys}"
+    for label, manifest in (("cold", cold), ("warm", warm),
+                            ("cold_parallel", par)):
         for s in manifest["stages"]:
             rows.append((f"pipeline/{label}/{s['stage']}",
                          s["wall_s"] * 1e6, f"hit={s['cache_hit']}"))
         rows.append((f"pipeline/{label}/total", manifest["wall_s"] * 1e6,
                      f"hits={manifest['cache_hits']};"
                      f"misses={manifest['cache_misses']}"))
-    LAST_ENTRY = {"cold": _summary(cold), "warm": _summary(warm)}
+    speedup = cold["wall_s"] / max(par["wall_s"], 1e-9)
+    rows.append((f"pipeline/parallel_speedup", speedup,
+                 f"workers={PARALLEL_WORKERS}"))
+    LAST_ENTRY = {"cold": _summary(cold), "warm": _summary(warm),
+                  "cold_parallel": _summary(par),
+                  "parallel_speedup_x": speedup,
+                  "parallel_workers": PARALLEL_WORKERS,
+                  "host_cpus": os.cpu_count()}
     return rows

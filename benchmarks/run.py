@@ -49,6 +49,10 @@ def write_trajectory(path: str = TRAJECTORY) -> None:
         json.dump(history, f, indent=1)
     print(f"# pipeline trajectory -> {os.path.abspath(path)} "
           f"({len(history)} entries)", flush=True)
+    speedup = bench_pipeline.LAST_ENTRY.get("parallel_speedup_x")
+    if speedup is not None:
+        print(f"# pipeline parallel speedup: {speedup:.2f}x "
+              f"(workers={bench_pipeline.PARALLEL_WORKERS})", flush=True)
 
 
 def main() -> None:

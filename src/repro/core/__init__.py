@@ -10,7 +10,10 @@ Pipeline (paper Fig. 1):
 from repro.core.unit_of_work import IRCost, jaxpr_cost, trace_cost  # noqa: F401
 from repro.core.registry import BlockDef, BlockTable, Segment  # noqa: F401
 from repro.core.blocks_lm import build_block_table  # noqa: F401
-from repro.core.meter import init_meter, tick_step, read_meter, meter_value  # noqa: F401
+from repro.core.meter import (  # noqa: F401
+    init_meter, materialize_dyn, meter_value, read_meter, read_meters,
+    tick_step,
+)
 from repro.core.intervals import (  # noqa: F401
     Interval, IntervalBuilder, Marker, Profile, build_profile,
     build_profile_from_steps, build_profile_parallel,

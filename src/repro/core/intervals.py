@@ -125,6 +125,11 @@ class IntervalBuilder:
         except KeyError:
             return self._streams.setdefault(kind, self.table.expand(kind))
 
+    @property
+    def deferred(self) -> bool:
+        """True when steps are only logged and analyzed at ``finalize``."""
+        return self._defer
+
     # ------------------------------------------------------------------
     def add_step(self, dyn: Optional[Dict[str, Any]] = None,
                  kind: str = "default"):
@@ -304,6 +309,26 @@ class IntervalBuilder:
                     self._dyn.setdefault(k, []).append(np.asarray(v))
 
     # ------------------------------------------------------------------
+    def finalize_parallel(self, *, chunk_steps: Optional[int] = None,
+                          max_workers: Optional[int] = None) -> Profile:
+        """Sharded ``finalize``: the pending (deferred) step log is split
+        into whole-step chunks, analyzed concurrently on a thread pool and
+        merged in stream order — bit-for-bit identical to ``finalize()``.
+        The chunk starts are positioned at the builder's current state
+        (global counter, step index, cumulative hits), so the path also
+        works after eager/absorbed prefixes.
+        """
+        pending = self.step_log[self._processed:]
+        if pending:
+            results = analyze_steps_parallel(
+                self.table, self.interval_uow, pending,
+                chunk_steps=chunk_steps, max_workers=max_workers,
+                g0=self._g, step0=self._step, baseline_hits=self._cum_hits)
+            self._processed = len(self.step_log)
+            for res, chunk in results:
+                self._absorb(res, chunk)
+        return self.finalize()
+
     def finalize(self) -> Profile:
         if self._processed < len(self.step_log):   # deferred analysis
             pending = self.step_log[self._processed:]

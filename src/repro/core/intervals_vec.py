@@ -45,6 +45,7 @@ from __future__ import annotations
 import concurrent.futures
 import dataclasses
 import os
+import threading as _threading
 import time as _time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -307,24 +308,28 @@ def _analyze_steps(table: BlockTable, interval_uow: float,
 # ---------------------------------------------------------------------------
 
 def chunk_starts(table: BlockTable, steps: Sequence[Step],
-                 bounds: Sequence[Tuple[int, int]]
+                 bounds: Sequence[Tuple[int, int]], *, g0: float = 0.0,
+                 baseline_hits: Optional[np.ndarray] = None
                  ) -> List[Tuple[float, np.ndarray]]:
     """Exact (global counter, baseline hit counts) at each chunk start.
 
     Both are cheap closed forms: the counter is the running sum of static
     per-step totals (same float op order as the legacy path); the baselines
     are integer sums of the static per-kind execution counts.
+    ``g0``/``baseline_hits`` position the whole stream inside a larger run
+    (a builder finalizing only its un-analyzed suffix).
     """
     kinds = [k for k, _ in steps]
     tot_of = {k: table.step_uow(k) for k in set(kinds)}
     cnt_of = {k: table.step_counts(k) for k in set(kinds)}
     tots = np.empty(len(steps) + 1)
-    tots[0] = 0.0
+    tots[0] = float(g0)
     for s, k in enumerate(kinds):
         tots[s + 1] = tot_of[k]
     offs = np.cumsum(tots)
     out: List[Tuple[float, np.ndarray]] = []
-    base = np.zeros(table.n_blocks, np.int64)
+    base = (np.zeros(table.n_blocks, np.int64) if baseline_hits is None
+            else baseline_hits.astype(np.int64, copy=True))
     done = 0
     for a, b in bounds:
         assert a == done, "chunks must partition the step stream in order"
@@ -338,12 +343,16 @@ def chunk_starts(table: BlockTable, steps: Sequence[Step],
 def analyze_steps_parallel(table: BlockTable, interval_uow: float,
                            steps: Sequence[Step], *,
                            chunk_steps: Optional[int] = None,
-                           max_workers: Optional[int] = None
+                           max_workers: Optional[int] = None,
+                           g0: float = 0.0, step0: int = 0,
+                           baseline_hits: Optional[np.ndarray] = None
                            ) -> List[Tuple[ChunkResult, Sequence[Step]]]:
     """Fan the step stream out over a thread pool in whole-step chunks.
 
     Returns the per-chunk results in stream order, ready to be absorbed
     sequentially (the merge is associative; see module docstring).
+    ``g0``/``step0``/``baseline_hits`` position the stream inside a larger
+    run, so a builder with prior state can shard just its pending suffix.
     """
     n_steps = len(steps)
     workers = max_workers or min(32, (os.cpu_count() or 2))
@@ -351,11 +360,18 @@ def analyze_steps_parallel(table: BlockTable, interval_uow: float,
         chunk_steps = max(1, -(-n_steps // (4 * workers)))
     bounds = [(a, min(a + chunk_steps, n_steps))
               for a in range(0, n_steps, chunk_steps)]
-    starts = chunk_starts(table, steps, bounds)
+    starts = chunk_starts(table, steps, bounds, g0=g0,
+                          baseline_hits=baseline_hits)
+
+    def _chunk(a: int, b: int, g: float, base: np.ndarray) -> ChunkResult:
+        obs.set_worker(_threading.current_thread().name)
+        return analyze_steps(table, interval_uow, steps[a:b],
+                             g0=g, step0=step0 + a, baseline_hits=base)
+
     table.expand_all()        # warm the per-kind cache before threads race
-    with concurrent.futures.ThreadPoolExecutor(max_workers=workers) as ex:
-        futs = [ex.submit(analyze_steps, table, interval_uow, steps[a:b],
-                          g0=g0, step0=a, baseline_hits=base)
-                for (a, b), (g0, base) in zip(bounds, starts)]
+    with concurrent.futures.ThreadPoolExecutor(
+            max_workers=workers, thread_name_prefix="intervals") as ex:
+        futs = [ex.submit(_chunk, a, b, g, base)
+                for (a, b), (g, base) in zip(bounds, starts)]
         return [(f.result(), steps[a:b])
                 for f, (a, b) in zip(futs, bounds)]

@@ -10,7 +10,7 @@ Fig. 4 measures (see benchmarks/bench_sync_scaling.py).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,19 +64,64 @@ def meter_psum(meter: Dict[str, jax.Array], axis_name: str):
     return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), meter)
 
 
-def read_meter(meter) -> Dict[str, np.ndarray]:
-    """Host-side readback of the device meter.  Each readback publishes the
-    unit-of-work totals to the ``meter.*`` gauges (one gauge write per
-    readback, not per step — readbacks are how UoW leaves the device)."""
-    uow = meter_value(meter)
-    steps = int(meter["steps"])
+def read_meters(meters: Sequence[Dict[str, jax.Array]]
+                ) -> List[Dict[str, np.ndarray]]:
+    """Batched host readback of device meters: ONE device transfer for the
+    whole batch (``jax.device_get`` of the meter pytree list), instead of
+    one sync per limb per meter.  Publishes the unit-of-work totals of the
+    *last* meter in the batch to the ``meter.*`` gauges (gauges are
+    last-write-wins; the final reading is the run total)."""
+    if not meters:
+        return []
+    host = jax.device_get(list(meters))          # single device sync
+    out: List[Dict[str, np.ndarray]] = []
+    for h in host:
+        uow = (int(h["uow_hi"]) << 32) | int(h["uow_lo"])
+        steps = int(h["steps"])
+        out.append({
+            "uow": np.uint64(uow),
+            "counts": np.asarray(h["counts"]),
+            "steps": steps,
+        })
     m = obs.metrics()
-    m.record("meter.uow_total", float(uow))
+    m.count("meter.readbacks")
+    last, steps = out[-1], out[-1]["steps"]
+    m.record("meter.uow_total", float(last["uow"]))
     m.record("meter.steps", steps)
     if steps:
-        m.record("meter.uow_per_step", uow / steps)
-    return {
-        "uow": np.uint64(uow),
-        "counts": np.asarray(meter["counts"]),
-        "steps": steps,
-    }
+        m.record("meter.uow_per_step", int(last["uow"]) / steps)
+    return out
+
+
+def read_meter(meter) -> Dict[str, np.ndarray]:
+    """Host-side readback of one device meter (one device sync — delegates
+    to the batched :func:`read_meters`).  Each readback publishes the
+    unit-of-work totals to the ``meter.*`` gauges (one gauge write per
+    readback, not per step — readbacks are how UoW leaves the device)."""
+    return read_meters([meter])[0]
+
+
+def materialize_dyn(steps: List, *, chunk: int = 512) -> int:
+    """Convert device-resident dynamic aux arrays in a ``(kind, dyn)`` step
+    log to host numpy arrays, in place.
+
+    The deferred builder logs the raw per-step aux arrays straight off the
+    jit'd step, so the training hot loop never blocks on a device->host
+    transfer; this drains them afterwards with **one device sync per
+    ``chunk`` of values** (a single ``jax.device_get`` of the whole slice)
+    rather than one per interval/step.  Idempotent: host arrays pass
+    through untouched.  Returns the number of arrays fetched.
+    """
+    pend = [(i, k) for i, (_, dyn) in enumerate(steps) if dyn
+            for k, v in dyn.items() if isinstance(v, jax.Array)]
+    for lo in range(0, len(pend), chunk):
+        part = pend[lo:lo + chunk]
+        vals = jax.device_get([steps[i][1][k] for i, k in part])  # one sync
+        for (i, k), v in zip(part, vals):
+            kind, dyn = steps[i]
+            dyn = dict(dyn)
+            dyn[k] = np.asarray(v)
+            steps[i] = (kind, dyn)
+    if pend:
+        obs.metrics().count("meter.dyn_fetched", len(pend))
+    return len(pend)

@@ -153,19 +153,27 @@ def cached_build(cache_dir: str, table: BlockTable, interval_uow: float,
     return profile, False
 
 
-def cached_finalize(cache_dir: str, builder: IntervalBuilder
+def cached_finalize(cache_dir: str, builder: IntervalBuilder, *,
+                    max_workers: Optional[int] = None,
+                    chunk_steps: Optional[int] = None
                     ) -> Tuple[Profile, bool]:
     """Cache-aware ``finalize()`` for a builder that logged its steps.
 
     Uses ``builder.step_log`` as the cache key input; most useful with
     ``IntervalBuilder(..., defer=True)``, where a hit skips the entire
-    batch analysis.
+    batch analysis.  ``max_workers > 1`` analyzes a miss through the
+    sharded ``finalize_parallel`` path (bit-for-bit identical profile, so
+    serial and parallel runs share cache entries).
     """
     key = profile_cache_key(builder.table, builder.interval_uow,
                             builder.step_log)
     path = os.path.join(cache_dir, key)
     if os.path.exists(os.path.join(path, "meta.json")):
         return load_profile(path), True
-    profile = builder.finalize()
+    if max_workers is not None and max_workers > 1:
+        profile = builder.finalize_parallel(chunk_steps=chunk_steps,
+                                            max_workers=max_workers)
+    else:
+        profile = builder.finalize()
     save_profile(path, profile)
     return profile, False

@@ -51,6 +51,7 @@ def build_config(args) -> "PipelineConfig":
         ckpt_every=args.ckpt_every,
         defer_analysis=not args.no_defer_analysis,
         profile_platform=args.profile_platform,
+        workers=0 if args.serial else args.workers,
     )
 
 
@@ -84,6 +85,13 @@ def main():
     ap.add_argument("--no-defer-analysis", action="store_true",
                     help="legacy per-step interval analysis instead of the "
                          "deferred vectorized batch path")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="DAG scheduler worker threads: ready stages run "
+                         "concurrently and profiling shards across this "
+                         "many analysis threads (0/1 = serial; artifact "
+                         "digests are identical either way)")
+    ap.add_argument("--serial", action="store_true",
+                    help="force the serial stage loop (same as --workers 0)")
     ap.add_argument("--store", default="/tmp/repro-artifacts",
                     help="content-addressed artifact store root")
     ap.add_argument("--manifest-out",

@@ -69,6 +69,12 @@ def enabled() -> bool:
     return _tracer.enabled
 
 
+def set_worker(name: Optional[str]) -> None:
+    """Tag the calling thread with a logical worker name (scheduler pools
+    call this); subsequent spans/events carry it as a ``worker`` attr."""
+    _tracer.set_worker(name)
+
+
 # -- configuration -----------------------------------------------------
 def configure(*, trace: Optional[bool] = None,
               trace_dir: Optional[str] = None,

@@ -58,6 +58,9 @@ class Span:
         self.tracer._pop()
         if exc_type is not None:
             self.attrs["error"] = exc_type.__name__
+        worker = self.tracer.worker()
+        if worker is not None:
+            self.attrs.setdefault("worker", worker)
         self.tracer._emit({
             "ph": _PH_SPAN, "name": self.name, "cat": "span",
             "ts": self.tracer._us(self.t0), "dur": int((t1 - self.t0) * 1e6),
@@ -121,6 +124,9 @@ class Tracer:
         self._local = threading.local()
         self._sink_path = sink
         self._sink_file = None
+        # worker tagging: per-thread logical worker names (set by pool
+        # schedulers) so concurrent spans render as named tracks
+        self._thread_names: Dict[int, str] = {}
         if sink:
             os.makedirs(os.path.dirname(os.path.abspath(sink)), exist_ok=True)
             self._sink_file = open(sink, "a")
@@ -144,6 +150,20 @@ class Tracer:
                 self._sink_file.write(json.dumps(ev) + "\n")
                 self._sink_file.flush()
 
+    # -- worker tagging ------------------------------------------------
+    def set_worker(self, name: Optional[str]) -> None:
+        """Tag the calling thread with a logical worker name.  Every span
+        and event the thread emits afterwards carries a ``worker`` attr,
+        and the Chrome-trace export names the thread's track after it."""
+        self._local.worker = name
+        if name is not None:
+            with self._lock:
+                self._thread_names[threading.get_ident()] = name
+
+    def worker(self) -> Optional[str]:
+        """The calling thread's worker name (None when untagged)."""
+        return getattr(self._local, "worker", None)
+
     # -- public API ----------------------------------------------------
     def span(self, name: str, **attrs: Any):
         if not self.enabled:
@@ -153,6 +173,9 @@ class Tracer:
     def event(self, name: str, **attrs: Any) -> None:
         if not self.enabled:
             return
+        worker = self.worker()
+        if worker is not None:
+            attrs.setdefault("worker", worker)
         self._emit({
             "ph": _PH_INSTANT, "name": name, "cat": "event",
             "ts": self._us(time.perf_counter()), "s": "t",
@@ -203,12 +226,23 @@ class Tracer:
 def chrome_trace(events: List[Dict[str, Any]], *, process_name: str = "repro",
                  pid: Optional[int] = None) -> Dict[str, Any]:
     """Wrap raw events into a Chrome-trace document, prepending process
-    metadata so the viewer shows a named track."""
+    metadata so the viewer shows a named track.  Threads whose events
+    carry a ``worker`` attr (scheduler pool threads) additionally get
+    ``thread_name`` metadata, so a merged multi-worker trace renders the
+    parallel timeline as named worker tracks."""
     meta: List[Dict[str, Any]] = []
     pids = sorted({ev.get("pid", 0) for ev in events} | ({pid} - {None}))
     for p in pids:
         meta.append({"ph": "M", "name": "process_name", "pid": p, "tid": 0,
                      "args": {"name": f"{process_name}:{p}"}})
+    workers: Dict[tuple, str] = {}
+    for ev in events:
+        w = (ev.get("args") or {}).get("worker")
+        if w and "tid" in ev:
+            workers[(ev.get("pid", 0), ev["tid"])] = w
+    for (p, t), w in sorted(workers.items(), key=lambda kv: str(kv[0])):
+        meta.append({"ph": "M", "name": "thread_name", "pid": p, "tid": t,
+                     "args": {"name": str(w)}})
     return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
 
 

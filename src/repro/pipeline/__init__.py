@@ -12,3 +12,4 @@ from repro.pipeline.stages import (  # noqa: F401
 from repro.pipeline.runtime import (  # noqa: F401
     Pipeline, PipelineConfig, PipelineContext, platform_config,
 )
+from repro.pipeline.scheduler import run_dag  # noqa: F401

@@ -10,12 +10,14 @@ run on every platform; validation summarizes across them.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Union
 
 from repro import obs
 from repro.configs import get_config, reduced
 from repro.configs.base import ArchConfig
+from repro.pipeline.scheduler import run_dag
 from repro.pipeline.stages import (BaselineStage, MarkStage, ProfileStage,
                                    ReplayStage, SelectStage, Stage,
                                    ValidateStage)
@@ -60,6 +62,10 @@ class PipelineConfig:
     ckpt_every: int = 0
     defer_analysis: bool = True          # batch (vectorized) interval analysis
     profile_platform: Optional[str] = None   # default: platforms[0]
+    # stage-scheduler worker threads: 0/1 = the legacy serial loop, N>1 =
+    # concurrent DAG execution + sharded profile finalize.  Excluded from
+    # every stage spec, so artifact keys are identical either way.
+    workers: int = 0
 
     @property
     def profile_platform_name(self) -> str:
@@ -82,15 +88,24 @@ class PipelineConfig:
 class PipelineContext:
     """Per-run state stages see: config, store, produced artifacts/payloads,
     manifest entries, and lazily constructed per-platform trainers (a cache
-    hit upstream means the corresponding trainer is never even built)."""
+    hit upstream means the corresponding trainer is never even built).
 
-    def __init__(self, cfg: PipelineConfig, store: ArtifactStore):
+    Thread-safe: the DAG scheduler runs stages concurrently, so artifact
+    and manifest recording take a context lock and trainer construction is
+    serialized per platform (two platforms build concurrently; two stages
+    of one platform share a single build)."""
+
+    def __init__(self, cfg: PipelineConfig, store: ArtifactStore,
+                 workers: int = 0):
         self.cfg = cfg
         self.store = store
+        self.workers = workers
         self.artifacts: Dict[str, Artifact] = {}
         self.payloads: Dict[str, Any] = {}
         self.manifest: List[Dict] = []
         self._trainers: Dict[str, Any] = {}
+        self._lock = threading.Lock()
+        self._trainer_locks: Dict[str, threading.Lock] = {}
 
     # -- artifact accessors (stage name -> product) --------------------
     def key(self, name: str) -> str:
@@ -101,24 +116,34 @@ class PipelineContext:
 
     def record(self, stage: Stage, art: Artifact, payload: Any,
                hit: bool, wall_s: float) -> None:
-        self.artifacts[stage.name] = art
-        self.payloads[stage.name] = payload
-        self.manifest.append({"stage": stage.name, "kind": stage.kind,
-                              "key": art.key, "cache_hit": hit,
-                              "wall_s": wall_s, "path": art.path})
+        with self._lock:
+            self.artifacts[stage.name] = art
+            self.payloads[stage.name] = payload
+            self.manifest.append({"stage": stage.name, "kind": stage.kind,
+                                  "key": art.key, "cache_hit": hit,
+                                  "wall_s": wall_s, "path": art.path})
 
     # -- platforms -----------------------------------------------------
     def trainer(self, platform: str):
         """Lazy Trainer per platform.  Only the profile platform is
         instrumented; replay/baseline platforms use the plain step fn."""
-        if platform not in self._trainers:
-            from repro.train import Trainer
-            cfg = self.cfg
-            self._trainers[platform] = Trainer(
-                cfg.arch_for(platform), seq_len=cfg.seq_len, batch=cfg.batch,
-                interval_steps=cfg.interval_steps, seed=cfg.seed,
-                instrument=(platform == cfg.profile_platform_name),
-                defer_analysis=cfg.defer_analysis, donate=False)
+        with self._lock:
+            tr = self._trainers.get(platform)
+            if tr is not None:
+                return tr
+            lock = self._trainer_locks.setdefault(platform, threading.Lock())
+        with lock:
+            if platform not in self._trainers:
+                from repro.train import Trainer
+                cfg = self.cfg
+                tr = Trainer(
+                    cfg.arch_for(platform), seq_len=cfg.seq_len,
+                    batch=cfg.batch, interval_steps=cfg.interval_steps,
+                    seed=cfg.seed,
+                    instrument=(platform == cfg.profile_platform_name),
+                    defer_analysis=cfg.defer_analysis, donate=False)
+                with self._lock:
+                    self._trainers[platform] = tr
         return self._trainers[platform]
 
     def runner(self, platform: str):
@@ -143,28 +168,46 @@ class Pipeline:
         out.append(ValidateStage())
         return out
 
-    def run(self) -> Dict:
+    def run(self, workers: Optional[int] = None) -> Dict:
         """Run every stage (cache-aware) and return the run manifest.
+
+        With ``workers > 1`` (argument, else ``cfg.workers``) the stage
+        graph executes on a concurrent DAG scheduler: every stage whose
+        dependencies are complete runs immediately on a worker thread, so
+        per-platform baselines/replays and the profile overlap instead of
+        serializing.  Stage identity is unaffected — artifact keys, stage
+        payloads and the manifest's stage order are identical to a serial
+        run; only wall time (and the worker tags on trace spans) differ.
 
         The manifest embeds an ``obs`` block: the process metrics snapshot
         (store hit/miss/bytes, per-stage wall-time histograms, trainer and
         analyzer metrics) plus whether tracing was live for the run.
         """
-        ctx = PipelineContext(self.cfg, self.store)
+        n_workers = self.cfg.workers if workers is None else workers
+        stages = self.stages()
+        order = [s.name for s in stages]
+        by_name = {s.name: s for s in stages}
+        ctx = PipelineContext(self.cfg, self.store, workers=n_workers)
+        deps = {s.name: s.deps(ctx) for s in stages}
         t0 = time.perf_counter()
         with obs.span("pipeline.run", arch=self.cfg.arch,
                       platforms=list(self.cfg.platforms),
-                      selector=self.cfg.selector):
-            for stage in self.stages():
-                stage.run(ctx)
-        hits = sum(1 for s in ctx.manifest if s["cache_hit"])
+                      selector=self.cfg.selector, workers=n_workers):
+            run_dag(order, deps, lambda name: by_name[name].run(ctx),
+                    max_workers=n_workers, thread_name_prefix="pipe")
+        # stages record completion concurrently; report them in graph
+        # declaration order so serial and parallel manifests are comparable
+        entries = {e["stage"]: e for e in ctx.manifest}
+        manifest = [entries[name] for name in order]
+        hits = sum(1 for s in manifest if s["cache_hit"])
         return {
             "config": dataclasses.asdict(self.cfg),
             "store": self.store.root,
-            "stages": ctx.manifest,
+            "workers": n_workers,
+            "stages": manifest,
             "metrics": ctx.payload("validate"),
             "cache_hits": hits,
-            "cache_misses": len(ctx.manifest) - hits,
+            "cache_misses": len(manifest) - hits,
             "wall_s": time.perf_counter() - t0,
             "obs": {"traced": obs.enabled(),
                     "store_counters": dict(self.store.counters),

@@ -1,0 +1,103 @@
+"""Concurrent DAG executor for the stage graph.
+
+``run_dag`` drives a dependency graph of named nodes through a thread
+pool: every node whose dependencies are complete is submitted
+immediately, so independent branches (per-platform baselines and
+replays, profile vs. baseline) overlap instead of serializing.  The
+executor is deliberately generic — nodes are names, dependencies are
+name lists, and the work is an opaque ``run(name)`` callable — so the
+pipeline runtime stays the single place that knows what a stage *is*.
+
+Scheduling is deterministic: ready nodes are submitted in declaration
+order, so with ``max_workers=1`` (or ``0``) execution degrades to
+exactly the legacy serial loop.  Worker threads tag themselves into the
+process tracer (``obs.set_worker``) before running a node, so every
+span a stage emits carries the worker id and ``repro.launch.obs``
+merge/export renders the parallel timeline as named tracks.
+
+Failure semantics: the first node exception propagates to the caller;
+nodes already running are allowed to finish, nothing new is scheduled,
+and queued-but-unstarted futures are cancelled.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+from typing import Callable, Dict, Mapping, Sequence, Set
+
+from repro import obs
+
+
+def run_dag(order: Sequence[str], deps: Mapping[str, Sequence[str]],
+            run: Callable[[str], None], *, max_workers: int = 0,
+            thread_name_prefix: str = "worker") -> None:
+    """Execute every node of a dependency graph, concurrently when possible.
+
+    ``order`` lists all nodes (and fixes the tie-break: among ready nodes,
+    earlier declaration runs/submits first).  ``deps[name]`` names the
+    nodes that must complete before ``name`` may start.  ``run(name)``
+    performs the work; its exceptions propagate.  ``max_workers <= 1``
+    runs serially on the calling thread — no pool, no worker tags —
+    which keeps the serial path byte-identical to the legacy loop.
+
+    Raises ``ValueError`` for unknown/duplicate nodes and ``RuntimeError``
+    when the graph has a cycle (detected, not deadlocked).
+    """
+    names = list(order)
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate node names in {names!r}")
+    known = set(names)
+    waiting: Dict[str, Set[str]] = {}
+    for n in names:
+        ds = set(deps.get(n, ()))
+        unknown = ds - known
+        if unknown:
+            raise ValueError(f"node {n!r} depends on unknown {sorted(unknown)}")
+        waiting[n] = ds
+
+    if max_workers <= 1:
+        _run_serial(names, waiting, run)
+        return
+
+    completed: Set[str] = set()
+    futs: Dict[cf.Future, str] = {}
+    with cf.ThreadPoolExecutor(max_workers=max_workers,
+                               thread_name_prefix=thread_name_prefix) as ex:
+        try:
+            while waiting or futs:
+                ready = [n for n in names
+                         if n in waiting and waiting[n] <= completed]
+                for n in ready:
+                    del waiting[n]
+                    futs[ex.submit(_tagged, run, n)] = n
+                if not futs:
+                    raise RuntimeError(
+                        f"dependency cycle among {sorted(waiting)}")
+                done, _ = cf.wait(futs, return_when=cf.FIRST_COMPLETED)
+                for f in done:
+                    name = futs.pop(f)
+                    f.result()          # re-raises the node's exception
+                    completed.add(name)
+        finally:
+            for f in futs:              # queued-but-unstarted work
+                f.cancel()
+
+
+def _run_serial(names: Sequence[str], waiting: Dict[str, Set[str]],
+                run: Callable[[str], None]) -> None:
+    completed: Set[str] = set()
+    while waiting:
+        ready = [n for n in names if n in waiting and waiting[n] <= completed]
+        if not ready:
+            raise RuntimeError(f"dependency cycle among {sorted(waiting)}")
+        for n in ready:
+            del waiting[n]
+            run(n)
+            completed.add(n)
+
+
+def _tagged(run: Callable[[str], None], name: str) -> None:
+    """Run one node with the pool thread's worker id on the tracer, so
+    every span the node emits is attributable to its worker track."""
+    obs.set_worker(threading.current_thread().name)
+    run(name)

@@ -30,7 +30,15 @@ from repro.pipeline.store import Artifact, ArtifactStore
 
 class Stage:
     """One pipeline step.  Subclasses define ``kind``, ``spec``,
-    ``upstream``, ``compute`` and the payload codec (``save``/``load``)."""
+    ``deps``, ``compute`` and the payload codec (``save``/``load``).
+
+    ``deps`` names the upstream *stages* this one consumes; it is both
+    the edge list the concurrent DAG scheduler executes and the source
+    of ``upstream`` (the consumed artifact *keys* that chain into this
+    stage's content address) — one declaration, two uses, so the
+    scheduler can never run a stage before the artifacts its key
+    depends on exist.
+    """
 
     kind: str = ""
     name: str = ""
@@ -39,11 +47,16 @@ class Stage:
     def spec(self, ctx) -> Dict:
         raise NotImplementedError
 
-    def upstream(self, ctx) -> List[str]:
+    def deps(self, ctx) -> List[str]:
+        """Names of the stages whose artifacts this stage consumes."""
         return []
 
     def compute(self, ctx) -> Any:
         raise NotImplementedError
+
+    # -- derived -------------------------------------------------------
+    def upstream(self, ctx) -> List[str]:
+        return [ctx.key(name) for name in self.deps(ctx)]
 
     def save(self, store: ArtifactStore, art: Artifact, payload: Any) -> None:
         raise NotImplementedError
@@ -57,16 +70,19 @@ class Stage:
         with obs.span(f"stage.{self.name}", kind=self.kind) as sp:
             art = ctx.store.resolve(self.kind, self.spec(ctx),
                                     self.upstream(ctx))
-            hit = ctx.store.exists(art)
-            if hit:
-                with obs.span(f"stage.{self.name}.load"):
-                    payload = self.load(ctx.store, art)
-            else:
-                with obs.span(f"stage.{self.name}.compute"):
-                    payload = self.compute(ctx)
-                with obs.span(f"stage.{self.name}.save"):
-                    self.save(ctx.store, art, payload)
-                    ctx.store.commit(art)
+            # single-flight: concurrent stages (or pipelines) resolving
+            # the same key serialize here — one computes, the rest load
+            with ctx.store.single_flight(art.key):
+                hit = ctx.store.exists(art)
+                if hit:
+                    with obs.span(f"stage.{self.name}.load"):
+                        payload = self.load(ctx.store, art)
+                else:
+                    with obs.span(f"stage.{self.name}.compute"):
+                        payload = self.compute(ctx)
+                    with obs.span(f"stage.{self.name}.save"):
+                        self.save(ctx.store, art, payload)
+                        ctx.store.commit(art)
             sp.set(key=art.key, cache_hit=hit,
                    upstream=[k[:12] for k in art.upstream])
         wall = time.perf_counter() - t0
@@ -90,7 +106,10 @@ class ProfileStage(Stage):
     def compute(self, ctx):
         tr = ctx.trainer(ctx.cfg.profile_platform_name)
         tr.run(ctx.cfg.steps)
-        return tr.profile()
+        # sharded finalize: with a worker pool the deferred step log is
+        # split into chunks, analyzed concurrently and merged in stream
+        # order — bit-for-bit identical to the serial profile
+        return tr.profile(max_workers=ctx.workers or None)
 
     def save(self, store, art, payload):
         store.write_profile(art, payload)
@@ -107,8 +126,8 @@ class SelectStage(Stage):
         return {"selector": ctx.cfg.selector,
                 "args": dict(sorted(ctx.cfg.selector_args.items()))}
 
-    def upstream(self, ctx):
-        return [ctx.key("profile")]
+    def deps(self, ctx):
+        return ["profile"]
 
     def compute(self, ctx):
         sel_cls = SELECTORS[ctx.cfg.selector]
@@ -131,8 +150,8 @@ class MarkStage(Stage):
                 "search_distance": cfg.search_distance,
                 "ckpt_every": cfg.ckpt_every}
 
-    def upstream(self, ctx):
-        return [ctx.key("profile"), ctx.key("select")]
+    def deps(self, ctx):
+        return ["profile", "select"]
 
     def compute(self, ctx):
         cfg = ctx.cfg
@@ -186,8 +205,8 @@ class ReplayStage(Stage):
     def spec(self, ctx) -> Dict:
         return ctx.cfg.platform_spec(self.platform)
 
-    def upstream(self, ctx):
-        return [ctx.key("profile"), ctx.key("mark")]
+    def deps(self, ctx):
+        return ["profile", "mark"]
 
     def compute(self, ctx):
         eng = ReplayEngine(ctx.runner(self.platform), ctx.payload("profile"))
@@ -210,12 +229,12 @@ class ValidateStage(Stage):
     def spec(self, ctx) -> Dict:
         return {"platforms": list(ctx.cfg.platforms)}
 
-    def upstream(self, ctx):
-        keys = [ctx.key("profile"), ctx.key("mark")]
+    def deps(self, ctx):
+        names = ["profile", "mark"]
         for p in ctx.cfg.platforms:
-            keys.append(ctx.key(f"replay@{p}"))
-            keys.append(ctx.key(f"baseline@{p}"))
-        return keys
+            names.append(f"replay@{p}")
+            names.append(f"baseline@{p}")
+        return names
 
     def compute(self, ctx):
         results_by = {p: ctx.payload(f"replay@{p}") for p in ctx.cfg.platforms}

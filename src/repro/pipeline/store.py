@@ -19,15 +19,25 @@ selection — stay put and hit the cache.
 ``spec.json`` is written last, atomically (write + ``os.replace``); its
 presence marks the artifact complete, so a crashed run never leaves a
 half-written directory that later loads as a hit.
+
+The store is concurrency-safe: every key has a per-key re-entrant lock
+(``single_flight``) that the stage driver holds across its
+check-compute-commit critical section, so two stages (or two pipelines
+sharing a store) that resolve the same artifact key compute it exactly
+once — the loser of the race blocks, then loads the winner's commit as
+a plain cache hit.  ``commit`` takes the same lock and is idempotent:
+an already-committed key returns without rewriting ``spec.json``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
 import tempfile
-from typing import Any, Dict, List, Optional, Sequence
+import threading
+from typing import Any, Dict, Iterator, List, Optional, Sequence
 
 from repro import obs
 from repro.core.intervals import Profile
@@ -81,6 +91,33 @@ class ArtifactStore:
         # per-instance cache accounting, mirrored into the process
         # MetricsRegistry (store.hit / store.miss / store.put_bytes)
         self.counters = {"hit": 0, "miss": 0, "put_bytes": 0}
+        self._counters_lock = threading.Lock()
+        # per-key re-entrant locks (commit() re-acquires under
+        # single_flight()); the registry itself is guarded by _locks_lock
+        self._key_locks: Dict[str, threading.RLock] = {}
+        self._locks_lock = threading.Lock()
+
+    def _key_lock(self, key: str) -> threading.RLock:
+        with self._locks_lock:
+            lock = self._key_locks.get(key)
+            if lock is None:
+                lock = self._key_locks.setdefault(key, threading.RLock())
+            return lock
+
+    @contextlib.contextmanager
+    def single_flight(self, key: str) -> Iterator[None]:
+        """Serialize the check-compute-commit critical section of one key.
+
+        Concurrent holders of the same key queue up; whoever enters first
+        computes, everyone after it sees the committed artifact and loads.
+        Re-entrant, so ``commit`` may be called while held.
+        """
+        with self._key_lock(key):
+            yield
+
+    def _count(self, name: str, amount: int = 1) -> None:
+        with self._counters_lock:
+            self.counters[name] += amount
 
     # -- addressing ----------------------------------------------------
     def path(self, kind: str, key: str) -> str:
@@ -94,7 +131,7 @@ class ArtifactStore:
 
     def exists(self, artifact: Artifact) -> bool:
         hit = os.path.exists(os.path.join(artifact.path, "spec.json"))
-        self.counters["hit" if hit else "miss"] += 1
+        self._count("hit" if hit else "miss")
         obs.metrics().count(f"store.{'hit' if hit else 'miss'}")
         if obs.enabled():
             obs.event("store.lookup", kind=artifact.kind,
@@ -119,22 +156,32 @@ class ArtifactStore:
 
     # -- completion marker --------------------------------------------
     def commit(self, artifact: Artifact) -> None:
-        """Mark the artifact complete (atomic: spec.json appears last)."""
-        os.makedirs(artifact.path, exist_ok=True)
-        doc = {"kind": artifact.kind, "key": artifact.key,
-               "spec": artifact.spec, "upstream": artifact.upstream}
-        fd, tmp = tempfile.mkstemp(dir=artifact.path, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(doc, f, indent=1, default=_jsonable)
-            os.replace(tmp, os.path.join(artifact.path, "spec.json"))
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-        nbytes = sum(os.path.getsize(os.path.join(d, f))
-                     for d, _, files in os.walk(artifact.path)
-                     for f in files)
-        self.counters["put_bytes"] += nbytes
+        """Mark the artifact complete (atomic: spec.json appears last).
+
+        Idempotent under concurrency: the per-key lock serializes racing
+        committers and an already-committed key returns without touching
+        the directory (or the put counters) again.
+        """
+        with self._key_lock(artifact.key):
+            marker = os.path.join(artifact.path, "spec.json")
+            if os.path.exists(marker):      # already committed: fast path
+                obs.metrics().count("store.commit_dedup")
+                return
+            os.makedirs(artifact.path, exist_ok=True)
+            doc = {"kind": artifact.kind, "key": artifact.key,
+                   "spec": artifact.spec, "upstream": artifact.upstream}
+            fd, tmp = tempfile.mkstemp(dir=artifact.path, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(doc, f, indent=1, default=_jsonable)
+                os.replace(tmp, marker)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+            nbytes = sum(os.path.getsize(os.path.join(d, f))
+                         for d, _, files in os.walk(artifact.path)
+                         for f in files)
+        self._count("put_bytes", nbytes)
         obs.metrics().count("store.put_bytes", nbytes)
         obs.metrics().count("store.put")
 

@@ -26,7 +26,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.blocks_lm import build_block_table
 from repro.core.intervals import IntervalBuilder, Profile
-from repro.core.meter import read_meter
+from repro.core.meter import materialize_dyn, read_meter
 from repro.core.registry import BlockTable
 from repro.core.replay import SimpleRunner
 from repro.models.model_zoo import Model, build_model
@@ -113,6 +113,9 @@ class Trainer:
         self.metrics_history: Deque[Dict[str, float]] = \
             deque(maxlen=max(history_cap, 1))
         self._tokens_per_step = self.shape.tokens
+        # batched end-of-run readback of the device meter (one device sync
+        # per run, not per interval); see read_meters in core/meter.py
+        self.meter_reading: Optional[Dict[str, np.ndarray]] = None
 
     # ------------------------------------------------------------------
     def init_state(self) -> TrainState:
@@ -149,7 +152,17 @@ class Trainer:
                              float(metrics["loss"]), dt * 1e3)
             if self.ckpt is not None:
                 self.ckpt.wait()
+            self._drain_device(state)
         return state
+
+    def _drain_device(self, state: TrainState) -> None:
+        """End-of-run device drain: one batched meter readback plus one
+        chunked fetch of any device-resident dynamic step-log entries —
+        the hot loop itself never blocks on a device->host transfer."""
+        if state.meter is not None:
+            self.meter_reading = read_meter(state.meter)
+        if self.builder is not None:
+            materialize_dyn(self.builder.step_log)
 
     def _post_step(self, step: int, dt: float, metrics, aux) -> None:
         self.step_times.append(dt)
@@ -168,15 +181,28 @@ class Trainer:
         m.record("train.tokens_per_s", self._tokens_per_step / max(dt, 1e-9))
         if self.builder is not None:
             dyn = {}
+            deferred = self.builder.deferred
             for k in ("expert_tokens", "dropped_tokens"):
                 if k in aux:
-                    dyn[k] = np.asarray(aux[k])
+                    # deferred builders log the device array as-is — no
+                    # per-step host sync; _drain_device fetches them in
+                    # chunked batches after the run (materialize_dyn)
+                    dyn[k] = aux[k] if deferred else np.asarray(aux[k])
             self.builder.add_step(dyn or None)
 
     # ------------------------------------------------------------------
-    def profile(self) -> Profile:
+    def profile(self, *, max_workers: Optional[int] = None,
+                chunk_steps: Optional[int] = None) -> Profile:
+        """Finalize the profile.  ``max_workers > 1`` shards the deferred
+        step stream into chunks analyzed on a thread pool and merged in
+        stream order — bit-for-bit identical to the serial finalize."""
         assert self.builder is not None, "instrumentation disabled"
-        with obs.span("train.profile_finalize"):
+        materialize_dyn(self.builder.step_log)
+        with obs.span("train.profile_finalize",
+                      workers=int(max_workers or 0)):
+            if max_workers is not None and max_workers > 1:
+                return self.builder.finalize_parallel(
+                    chunk_steps=chunk_steps, max_workers=max_workers)
             return self.builder.finalize()
 
     def watchdog_report(self) -> WatchdogReport:

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.meter import (_add64, init_meter, meter_value, read_meter,
+from repro.core.meter import (_add64, init_meter, materialize_dyn,
+                              meter_value, read_meter, read_meters,
                               tick_step)
 from repro.core.registry import BlockDef, BlockTable, Segment
 from repro.core.unit_of_work import jaxpr_cost, trace_cost
@@ -129,6 +130,55 @@ def test_meter_dynamic_counts():
     m = tick_step(m, t, {"expert_tokens": jnp.asarray([10, 3])})
     assert int(m["counts"][1]) == 10
     assert int(m["counts"][2]) == 3
+
+
+def test_read_meters_batches_match_single_reads():
+    t = BlockTable([BlockDef("x", 7.0)], [Segment((0,), 3)])
+    meters = []
+    m = init_meter(t)
+    for _ in range(4):
+        m = tick_step(m, t)
+        meters.append(m)
+    batch = read_meters(meters)
+    assert len(batch) == 4
+    for i, rd in enumerate(batch):
+        single = read_meter(meters[i])
+        assert int(rd["uow"]) == int(single["uow"]) == (i + 1) * 21
+        assert rd["steps"] == single["steps"] == i + 1
+        assert np.array_equal(rd["counts"], single["counts"])
+        assert isinstance(rd["counts"], np.ndarray)
+    assert read_meters([]) == []
+
+
+def test_materialize_dyn_fetches_device_arrays_in_place():
+    steps = [
+        ("default", {"expert_tokens": jnp.asarray([4, 2]),
+                     "dropped_tokens": jnp.asarray(1)}),
+        ("default", None),
+        ("decode", {"expert_tokens": np.asarray([9, 9])}),   # already host
+    ]
+    fetched = materialize_dyn(steps)
+    assert fetched == 2
+    for _, dyn in steps:
+        if dyn:
+            for v in dyn.values():
+                assert isinstance(v, np.ndarray)
+    assert steps[0][1]["expert_tokens"].tolist() == [4, 2]
+    assert steps[0][1]["dropped_tokens"] == 1
+    assert steps[2][1]["expert_tokens"].tolist() == [9, 9]
+    # idempotent: second drain finds nothing device-resident
+    assert materialize_dyn(steps) == 0
+
+
+def test_materialize_dyn_chunked_multi_key_steps():
+    """Multiple device values in one step dict across chunk boundaries all
+    land (the per-assignment rebuild must not drop sibling keys)."""
+    steps = [("default", {"a": jnp.asarray(i), "b": jnp.asarray(10 * i)})
+             for i in range(5)]
+    assert materialize_dyn(steps, chunk=3) == 10
+    for i, (_, dyn) in enumerate(steps):
+        assert int(dyn["a"]) == i and int(dyn["b"]) == 10 * i
+        assert all(isinstance(v, np.ndarray) for v in dyn.values())
 
 
 def test_hlo_analysis_histogram_and_collectives():

@@ -177,6 +177,67 @@ def test_expand_memoized_once_per_kind():
     assert set(table._expand_count) == {"default", "prefill", "decode"}
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_finalize_parallel_matches_serial_finalize(seed):
+    """``finalize_parallel`` on a deferred builder is bit-for-bit identical
+    to the serial ``finalize`` — the chunk merge is associative."""
+    rng = np.random.default_rng(100 + seed)
+    kinds = ("default", "prefill")
+    table = make_table(rng, kinds=kinds)
+    steps = make_steps(rng, int(rng.integers(20, 70)), kinds)
+    iu = table.step_uow() * float(rng.uniform(0.3, 3.0))
+
+    serial = IntervalBuilder(table, iu, defer=True)
+    for k, d in steps:
+        serial.add_step(d, kind=k)
+
+    par = IntervalBuilder(table, iu, defer=True)
+    for k, d in steps:
+        par.add_step(d, kind=k)
+    assert par.deferred and par.intervals == []
+
+    assert_profiles_equal(
+        serial.finalize(),
+        par.finalize_parallel(chunk_steps=int(rng.integers(2, 9)),
+                              max_workers=3))
+
+
+def test_finalize_parallel_after_eager_prefix():
+    """The sharded finalize positions its chunks at the builder's current
+    state (global counter, step index, cumulative hits), so it is exact
+    even when a prefix of the stream was already analyzed eagerly."""
+    rng = np.random.default_rng(42)
+    table = make_table(rng)
+    steps = make_steps(rng, 40, ("default",))
+    iu = table.step_uow() * 0.9
+
+    legacy = IntervalBuilder(table, iu)
+    for k, d in steps:
+        legacy.add_step(d, kind=k)
+
+    b = IntervalBuilder(table, iu, defer=True)
+    for k, d in steps[:13]:
+        b.add_step(d, kind=k)
+    b.finalize()                             # analyze the prefix
+    for k, d in steps[13:]:
+        b.add_step(d, kind=k)                # deferred suffix
+    assert_profiles_equal(legacy.finalize(),
+                          b.finalize_parallel(chunk_steps=5, max_workers=2))
+
+
+def test_finalize_parallel_is_noop_when_fully_processed():
+    rng = np.random.default_rng(8)
+    table = make_table(rng)
+    steps = make_steps(rng, 10, ("default",))
+    b = IntervalBuilder(table, table.step_uow())
+    for k, d in steps:
+        b.add_step(d, kind=k)                # eager: nothing pending
+    q = IntervalBuilder(table, table.step_uow())
+    for k, d in steps:
+        q.add_step(d, kind=k)
+    assert_profiles_equal(q.finalize(), b.finalize_parallel(max_workers=4))
+
+
 def test_step_log_records_full_stream():
     rng = np.random.default_rng(9)
     table = make_table(rng)

@@ -1,11 +1,17 @@
 """End-to-end behaviour of the artifact pipeline (ISSUE 7 tentpole):
 cold run computes every stage, warm run hits the cache on every stage,
 and changing only the selector re-runs selection + downstream while the
-profile and baseline artifacts are reused."""
+profile and baseline artifacts are reused.  The concurrent DAG scheduler
+(ISSUE 9) must reproduce the serial run exactly: identical stage keys,
+bit-for-bit identical profile payload, identical selection/nugget JSON."""
 import dataclasses
+import json
+import os
 
+import numpy as np
 import pytest
 
+from repro.core.profile_store import load_profile
 from repro.pipeline import Pipeline, PipelineConfig
 
 CFG = PipelineConfig(arch="olmoe-1b-7b", platforms=("f32",),
@@ -101,6 +107,58 @@ def test_manifest_embeds_metrics_snapshot(store, cold):
     snap = ob["metrics"]
     assert snap["store.miss"]["value"] >= len(STAGE_NAMES)
     assert "pipeline.stage_s.profile" in snap
+
+
+def test_parallel_run_is_deterministic(tmp_path, cold):
+    """A cold ``workers=4`` run against a fresh store must reproduce the
+    serial run exactly: identical input-addressed stage keys, bit-for-bit
+    identical profile payload, identical selection/nugget JSON, and
+    replay results identical up to the wall-clock timing fields."""
+    cfg = dataclasses.replace(CFG, workers=4)
+    par = Pipeline(cfg, str(tmp_path)).run()
+    assert par["workers"] == 4
+    assert par["cache_misses"] == len(STAGE_NAMES)
+    # manifest reports stages in declaration order regardless of the
+    # order worker threads finished them
+    assert [s["stage"] for s in par["stages"]] == STAGE_NAMES
+    paths = {s["stage"]: s["path"] for s in par["stages"]}
+    cold_paths = {s["stage"]: s["path"] for s in cold["stages"]}
+
+    # identical content addresses on every stage
+    assert {s["stage"]: s["key"] for s in par["stages"]} == \
+        {s["stage"]: s["key"] for s in cold["stages"]}
+
+    # profile payload is bit-for-bit identical (sharded analysis merge)
+    ps = load_profile(os.path.join(cold_paths["profile"], "profile"))
+    pp = load_profile(os.path.join(paths["profile"], "profile"))
+    assert len(ps.intervals) == len(pp.intervals)
+    np.testing.assert_array_equal(ps.bbv_matrix(), pp.bbv_matrix())
+    for a, b in zip(ps.intervals, pp.intervals):
+        assert a.start_uow == b.start_uow and a.end_uow == b.end_uow
+        assert a.end_marker == b.end_marker
+        np.testing.assert_array_equal(a.stamps, b.stamps)
+        np.testing.assert_array_equal(a.hits_at_stamp, b.hits_at_stamp)
+
+    # selection + nugget JSON byte-identical
+    for stage, fname in (("select", "selection.json"),
+                         ("mark", "nuggets.json")):
+        with open(os.path.join(cold_paths[stage], fname), "rb") as f:
+            serial_doc = f.read()
+        with open(os.path.join(paths[stage], fname), "rb") as f:
+            assert f.read() == serial_doc, f"{stage} payload diverged"
+
+    # replay results identical up to wall-clock timings
+    def strip_times(path):
+        with open(os.path.join(path, "replay.json")) as f:
+            doc = json.load(f)
+        for r in doc["results"]:
+            for k in list(r):
+                if k.endswith("_s"):        # region_time_s etc.
+                    del r[k]
+        return doc
+
+    assert strip_times(paths["replay@f32"]) == \
+        strip_times(cold_paths["replay@f32"])
 
 
 def test_traced_warm_run_emits_one_span_per_stage(store, cold):

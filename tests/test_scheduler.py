@@ -1,0 +1,227 @@
+"""Unit tests for the concurrent DAG scheduler (``pipeline/scheduler.py``)
+and the artifact store's single-flight concurrency contract."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro import obs
+from repro.pipeline import ArtifactStore, run_dag
+from repro.pipeline.stages import Stage
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.configure(trace=False, reset_metrics=True)
+    yield
+    obs.configure(trace=False, reset_metrics=True)
+
+
+DIAMOND_ORDER = ["a", "b", "c", "d"]
+DIAMOND_DEPS = {"a": [], "b": ["a"], "c": ["a"], "d": ["b", "c"]}
+
+
+def _record_runner(log, lock=None, delay=0.0):
+    lock = lock or threading.Lock()
+
+    def run(name):
+        if delay:
+            time.sleep(delay)
+        with lock:
+            log.append(name)
+    return run
+
+
+# -- run_dag ------------------------------------------------------------
+def test_serial_runs_in_declaration_order():
+    log = []
+    run_dag(DIAMOND_ORDER, DIAMOND_DEPS, _record_runner(log), max_workers=0)
+    assert log == ["a", "b", "c", "d"]
+
+
+def test_serial_declaration_order_breaks_ties_not_deps():
+    # declared out of dependency order: the scheduler still runs deps first,
+    # ties broken by declaration position
+    log = []
+    run_dag(["d", "c", "b", "a"], DIAMOND_DEPS, _record_runner(log),
+            max_workers=1)
+    assert log == ["a", "c", "b", "d"]
+
+
+@pytest.mark.parametrize("workers", [2, 4])
+def test_parallel_respects_dependencies(workers):
+    log = []
+    run_dag(DIAMOND_ORDER, DIAMOND_DEPS, _record_runner(log, delay=0.005),
+            max_workers=workers)
+    assert sorted(log) == ["a", "b", "c", "d"]
+    pos = {n: i for i, n in enumerate(log)}
+    assert pos["a"] < pos["b"] and pos["a"] < pos["c"]
+    assert pos["d"] == 3
+
+
+def test_parallel_overlaps_independent_nodes():
+    """Two independent nodes must genuinely run concurrently: each blocks
+    until the other has started, so serial execution would deadlock."""
+    started = {"x": threading.Event(), "y": threading.Event()}
+    other = {"x": "y", "y": "x"}
+
+    def run(name):
+        started[name].set()
+        assert started[other[name]].wait(timeout=10.0), \
+            f"{name} never overlapped with {other[name]}"
+
+    run_dag(["x", "y"], {"x": [], "y": []}, run, max_workers=2)
+
+
+@pytest.mark.parametrize("workers", [0, 4])
+def test_cycle_raises(workers):
+    with pytest.raises(RuntimeError, match="cycle"):
+        run_dag(["a", "b"], {"a": ["b"], "b": ["a"]},
+                lambda n: None, max_workers=workers)
+
+
+def test_unknown_dependency_raises():
+    with pytest.raises(ValueError, match="unknown"):
+        run_dag(["a"], {"a": ["ghost"]}, lambda n: None)
+
+
+def test_duplicate_node_raises():
+    with pytest.raises(ValueError, match="duplicate"):
+        run_dag(["a", "a"], {"a": []}, lambda n: None)
+
+
+@pytest.mark.parametrize("workers", [0, 3])
+def test_node_error_propagates_and_blocks_downstream(workers):
+    log = []
+
+    def run(name):
+        if name == "b":
+            raise RuntimeError("stage b exploded")
+        log.append(name)
+
+    with pytest.raises(RuntimeError, match="stage b exploded"):
+        run_dag(["a", "b", "c"], {"a": [], "b": ["a"], "c": ["b"]},
+                run, max_workers=workers)
+    assert "c" not in log          # downstream of the failure never ran
+
+
+def test_workers_tag_spans():
+    t = obs.configure(trace=True)
+    run_dag(DIAMOND_ORDER, DIAMOND_DEPS,
+            lambda name: obs.event(f"node.{name}"),
+            max_workers=2, thread_name_prefix="sched")
+    evs = t.events()
+    workers = {e["args"].get("worker") for e in evs
+               if e["name"].startswith("node.")}
+    assert workers and all(w and w.startswith("sched") for w in workers)
+    # chrome export names the worker threads via thread_name metadata
+    meta = [r for r in obs.chrome_trace(evs)["traceEvents"]
+            if r.get("ph") == "M" and r.get("name") == "thread_name"]
+    named = {r["args"]["name"] for r in meta}
+    assert workers <= named
+
+
+# -- store single-flight ------------------------------------------------
+class _CountingStage(Stage):
+    """Minimal stage: spec is fixed, compute counts its invocations."""
+
+    kind = "validation"            # any registered kind works
+    name = "counting"
+
+    def __init__(self):
+        self.computes = 0
+        self._lock = threading.Lock()
+
+    def spec(self, ctx):
+        return {"fixed": 1}
+
+    def compute(self, ctx):
+        with self._lock:
+            self.computes += 1
+        time.sleep(0.02)           # widen the race window
+        return {"value": 42}
+
+    def save(self, store, art, payload):
+        store.write_json(art, "payload.json", payload)
+
+    def load(self, store, art):
+        return store.read_json(art, "payload.json")
+
+
+class _DummyCtx:
+    def __init__(self, store):
+        self.store = store
+        self.records = []
+        self._lock = threading.Lock()
+
+    def record(self, stage, art, payload, hit, wall_s):
+        with self._lock:
+            self.records.append((stage.name, art.key, payload, hit))
+
+
+def test_single_flight_computes_shared_key_once(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    stage = _CountingStage()
+    ctx = _DummyCtx(store)
+    n = 8
+    barrier = threading.Barrier(n)
+    errors = []
+
+    def racer():
+        try:
+            barrier.wait(timeout=10.0)
+            stage.run(ctx)
+        except Exception as e:      # pragma: no cover - fail loudly below
+            errors.append(e)
+
+    threads = [threading.Thread(target=racer) for _ in range(n)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30.0)
+    assert not errors
+    assert stage.computes == 1, "shared key computed more than once"
+    assert len(ctx.records) == n
+    keys = {k for _, k, _, _ in ctx.records}
+    assert len(keys) == 1
+    payloads = [p for _, _, p, _ in ctx.records]
+    assert all(p == {"value": 42} for p in payloads)
+    hits = [h for _, _, _, h in ctx.records]
+    assert hits.count(False) == 1 and hits.count(True) == n - 1
+
+
+def test_concurrent_commit_is_idempotent(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = store.resolve("validation", {"x": 1})
+    store.write_json(art, "payload.json", {"ok": True})
+    n = 6
+    barrier = threading.Barrier(n)
+
+    def committer():
+        barrier.wait(timeout=10.0)
+        store.commit(art)
+
+    threads = [threading.Thread(target=committer) for _ in range(n)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30.0)
+    marker = os.path.join(art.path, "spec.json")
+    with open(marker) as f:
+        doc = json.load(f)
+    assert doc["key"] == art.key
+    # exactly one commit actually wrote; the rest deduped
+    assert obs.metrics().snapshot()["store.put"]["value"] == 1
+    assert not [f for f in os.listdir(art.path) if f.endswith(".tmp")]
+    assert store.exists(art)
+
+
+def test_single_flight_reentrant_for_commit(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = store.resolve("validation", {"y": 2})
+    with store.single_flight(art.key):
+        store.write_json(art, "payload.json", {})
+        store.commit(art)          # must not deadlock on the same key lock
+    assert store.exists(art)
