@@ -10,9 +10,17 @@ disabled (the default), the per-step observability calls the Trainer makes
 (one disabled span check plus a counter/gauge/histogram bundle per step)
 must cost under 2 percent of a median training step.  The per-call costs
 are micro-benchmarked and compared against the measured step time; breach
-raises, failing the harness."""
+raises, failing the harness.
+
+The fault-tolerance machinery's disabled path rides the same gate: with
+no ``REPRO_FAULTS`` the injector is ``None`` (one env lookup per run, an
+is-None branch per stage) and without a journal the stage driver's
+``getattr`` probe is the whole cost.  These are per-*stage* costs counted
+here per-*step* — a deliberate over-estimate — and the combined obs +
+fault disabled bundle must still clear the 2 percent budget."""
 from __future__ import annotations
 
+import os
 import time
 from typing import List
 
@@ -23,6 +31,7 @@ from repro import obs
 from repro.configs import get_config, reduced
 from repro.core import (RandomSelector, create_nuggets, marker_hook_fraction,
                         plan_markers)
+from repro.faults import FaultInjector
 from repro.train import Trainer
 
 OBS_BUDGET_FRACTION = 0.02      # disabled-path obs cost per step, max
@@ -31,6 +40,12 @@ OBS_BUDGET_FRACTION = 0.02      # disabled-path obs cost per step, max
 # observation, 2 gauge writes — plus one disabled span() check to cover
 # span-wrapped hot loops
 OBS_CALLS_PER_STEP = {"count": 1, "observe": 1, "record": 2, "span": 1}
+
+# disabled fault-tolerance checks, conservatively billed per step even
+# though they really fire per stage (is-None branch, journal getattr
+# probe) or once per run (env spec lookup)
+FAULT_CALLS_PER_STEP = {"from_env": 1, "injector_check": 1,
+                        "journal_check": 1}
 
 
 def _per_call_ns(fn, n: int = 20_000) -> float:
@@ -60,10 +75,34 @@ def obs_disabled_costs() -> dict:
     return costs
 
 
+def fault_disabled_costs() -> dict:
+    """Nanoseconds per disabled fault-tolerance check: env construction
+    with no spec set (returns None), the scheduler/store is-None branch,
+    and the stage driver's journal getattr probe."""
+    env = {k: v for k, v in os.environ.items() if k != "REPRO_FAULTS"}
+    injector = None
+    probe = object()                 # ctx without a journal_event attr
+    sink = {"hits": 0}
+
+    def check():
+        if injector is not None:     # the store/scheduler hot branch
+            sink["hits"] += 1
+
+    return {
+        "from_env": _per_call_ns(lambda: FaultInjector.from_env(env)),
+        "injector_check": _per_call_ns(check),
+        "journal_check": _per_call_ns(
+            lambda: getattr(probe, "journal_event", None)),
+    }
+
+
 def obs_overhead_rows(step_s: float) -> List[Row]:
     """Budget rows + the <2%% gate against a measured step time."""
     costs = obs_disabled_costs()
-    per_step_ns = sum(costs[k] * n for k, n in OBS_CALLS_PER_STEP.items())
+    fcosts = fault_disabled_costs()
+    obs_ns = sum(costs[k] * n for k, n in OBS_CALLS_PER_STEP.items())
+    fault_ns = sum(fcosts[k] * n for k, n in FAULT_CALLS_PER_STEP.items())
+    per_step_ns = obs_ns + fault_ns
     frac = per_step_ns * 1e-9 / max(step_s, 1e-12)
     rows: List[Row] = [
         ("hook_overhead/obs_disabled_span", costs["span"] / 1e3,
@@ -74,15 +113,21 @@ def obs_overhead_rows(step_s: float) -> List[Row]:
          "ns_per_step_bundle={:.0f}".format(sum(
              costs[k] * n for k, n in OBS_CALLS_PER_STEP.items()
              if k != "span"))),
+        ("hook_overhead/fault_disabled_checks", fault_ns / 1e3,
+         "ns_per_step_bundle={:.0f};from_env={:.0f};check={:.0f};"
+         "journal={:.0f}".format(fault_ns, fcosts["from_env"],
+                                 fcosts["injector_check"],
+                                 fcosts["journal_check"])),
         ("hook_overhead/obs_step_fraction", frac * 1e6,
          f"frac={frac:.2e};budget={OBS_BUDGET_FRACTION};"
          f"step_ms={step_s * 1e3:.2f}"),
     ]
     if frac >= OBS_BUDGET_FRACTION:
         raise RuntimeError(
-            f"obs disabled-path overhead {frac:.2%} of a training step "
-            f"breaches the {OBS_BUDGET_FRACTION:.0%} budget "
-            f"(per-step obs cost {per_step_ns:.0f}ns, step {step_s:.4f}s)")
+            f"obs+fault disabled-path overhead {frac:.2%} of a training "
+            f"step breaches the {OBS_BUDGET_FRACTION:.0%} budget "
+            f"(obs {obs_ns:.0f}ns + fault {fault_ns:.0f}ns per step, "
+            f"step {step_s:.4f}s)")
     return rows
 
 

@@ -79,9 +79,25 @@ def run() -> List[Row]:
     speedup = cold["wall_s"] / max(par["wall_s"], 1e-9)
     rows.append((f"pipeline/parallel_speedup", speedup,
                  f"workers={PARALLEL_WORKERS}"))
+    # hit-path integrity cost: the warm pass re-hashes every payload
+    # against the digests recorded at commit — report it as a fraction
+    # of warm wall time (hash-on-commit is amortized into the cold miss)
+    wsc = warm["obs"]["store_counters"]
+    verified, verify_s = wsc["verified"], wsc["verify_s"]
+    assert verified == len(warm["stages"]), \
+        f"warm pass verified {verified}/{len(warm['stages'])} artifacts"
+    verify_frac = verify_s / max(warm["wall_s"], 1e-9)
+    rows.append(("pipeline/warm/verify_total", verify_s * 1e6,
+                 f"artifacts={verified};frac_of_warm={verify_frac:.2e}"))
+    rows.append(("pipeline/warm/verify_per_artifact",
+                 verify_s / max(verified, 1) * 1e6,
+                 f"artifacts={verified}"))
     LAST_ENTRY = {"cold": _summary(cold), "warm": _summary(warm),
                   "cold_parallel": _summary(par),
                   "parallel_speedup_x": speedup,
                   "parallel_workers": PARALLEL_WORKERS,
+                  "warm_verify_s": verify_s,
+                  "warm_verified_artifacts": verified,
+                  "warm_verify_frac": verify_frac,
                   "host_cpus": os.cpu_count()}
     return rows

@@ -8,6 +8,14 @@ Models the fleet behaviors the framework must survive at 1000+ nodes:
 - straggling workers -> logged + (optionally) excluded at the next elastic
   rescale,
 - elastic rescale -> new mesh, checkpoint resharded on restore.
+
+Shares the framework failure vocabulary (``repro.faults``) with the
+pipeline scheduler/store: event records come from ``fault_event`` and a
+step function that dies with :class:`~repro.faults.WorkerKilled` (e.g.
+raised by a :class:`~repro.faults.FaultInjector` ``kill`` rule) triggers
+the same restart-from-checkpoint path as a scheduled kill point — the
+heartbeat/restart state machine and the artifact pipeline speak one
+failure language.
 """
 from __future__ import annotations
 
@@ -15,6 +23,8 @@ import dataclasses
 import threading
 import time
 from typing import Callable, Dict, List, Optional
+
+from repro.faults import WorkerKilled, fault_event
 
 
 @dataclasses.dataclass
@@ -35,6 +45,9 @@ class HeartbeatCoordinator:
         self.workers: Dict[int, WorkerState] = {
             i: WorkerState(i, now) for i in range(n_workers)}
         self.events: List[Dict] = []
+        # per-instance step-time window: straggler medians must never
+        # leak between coordinators (or between tests)
+        self._times: List[float] = []
         self._lock = threading.Lock()
 
     def heartbeat(self, worker_id: int, step: int,
@@ -47,10 +60,9 @@ class HeartbeatCoordinator:
                 med = self._median_step_time(step_time_s)
                 if step_time_s > self.straggler_factor * med:
                     w.slow_strikes += 1
-                    self.events.append({"kind": "straggler", "worker": worker_id,
-                                        "step": step, "t": step_time_s})
-
-    _times: List[float] = []
+                    self.events.append(fault_event(
+                        "straggler", worker=worker_id, step=step,
+                        t=step_time_s))
 
     def _median_step_time(self, t: float) -> float:
         self._times.append(t)
@@ -66,8 +78,8 @@ class HeartbeatCoordinator:
                 if w.alive and now - w.last_heartbeat > self.timeout:
                     w.alive = False
                     dead.append(w.worker_id)
-                    self.events.append({"kind": "dead", "worker": w.worker_id,
-                                        "step": w.step})
+                    self.events.append(fault_event(
+                        "dead", worker=w.worker_id, step=w.step))
         return dead
 
     def alive_count(self) -> int:
@@ -93,6 +105,7 @@ class FaultInjectingRun:
         self.ckpt_every = ckpt_every
         self.kill_at = dict(kill_at)
         self.restarts = 0
+        self.events: List[Dict] = []
 
     def run(self, total_steps: int) -> int:
         step = 0
@@ -100,8 +113,18 @@ class FaultInjectingRun:
             kill_points = sorted(s for s in self.kill_at.values()
                                  if s > step)
             target = min([total_steps] + kill_points)
-            step = self.run_steps(step, target)
-            if step < total_steps and kill_points and step >= kill_points[0] - 1:
+            killed = False
+            try:
+                step = self.run_steps(step, target)
+            except WorkerKilled as e:
+                # a step function sharing the pipeline failure vocabulary
+                # (e.g. a FaultInjector kill rule) died mid-range: same
+                # restart-from-checkpoint path as a scheduled kill point
+                killed = True
+                self.events.append(fault_event("worker_killed", step=step,
+                                               detail=str(e)))
+            if step < total_steps and (
+                    killed or (kill_points and step >= kill_points[0] - 1)):
                 # simulate crash: roll back to last committed checkpoint
                 self.restarts += 1
                 step = (step // self.ckpt_every) * self.ckpt_every

@@ -52,6 +52,10 @@ def build_config(args) -> "PipelineConfig":
         defer_analysis=not args.no_defer_analysis,
         profile_platform=args.profile_platform,
         workers=0 if args.serial else args.workers,
+        max_attempts=args.max_attempts,
+        retry_backoff_s=args.retry_backoff,
+        stage_timeout_s=args.stage_timeout,
+        gc_orphans=not args.no_gc,
     )
 
 
@@ -92,6 +96,24 @@ def main():
                          "digests are identical either way)")
     ap.add_argument("--serial", action="store_true",
                     help="force the serial stage loop (same as --workers 0)")
+    ap.add_argument("--max-attempts", type=int, default=3,
+                    help="stage attempts before a transient failure is "
+                         "fatal (exponential backoff, deterministic jitter)")
+    ap.add_argument("--retry-backoff", type=float, default=0.05,
+                    metavar="S", help="base retry backoff seconds")
+    ap.add_argument("--stage-timeout", type=float, default=None,
+                    metavar="S", help="per-attempt stage wall-clock budget "
+                    "(breach raises StageTimeout and retries)")
+    ap.add_argument("--no-gc", action="store_true",
+                    help="keep orphaned uncommitted artifact dirs instead "
+                         "of gc'ing them at run start (use when other "
+                         "pipelines share this store concurrently)")
+    ap.add_argument("--faults", metavar="SPEC",
+                    help="fault-injection spec (see docs/robustness.md), "
+                         "e.g. 'raise:stage=profile,p=0.3;kill:n=1'; "
+                         "defaults to $REPRO_FAULTS")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="deterministic seed for --faults decisions")
     ap.add_argument("--store", default="/tmp/repro-artifacts",
                     help="content-addressed artifact store root")
     ap.add_argument("--manifest-out",
@@ -110,9 +132,19 @@ def main():
     else:
         obs.configure_from_env()
 
+    from repro.faults import FaultInjector
     from repro.pipeline import Pipeline
 
-    manifest = Pipeline(build_config(args), args.store).run()
+    if args.faults:
+        injector = FaultInjector.from_spec(args.faults, seed=args.fault_seed)
+    else:
+        injector = FaultInjector.from_env()
+    if injector is not None:
+        obs.log.kv("fault_injection_enabled", logger="launch.pipeline",
+                   rules=len(injector.rules), seed=injector.seed)
+
+    manifest = Pipeline(build_config(args), args.store,
+                        fault_injector=injector).run()
     if args.trace:
         tr = obs.tracer()
         trace_json = tr.write_chrome(os.path.join(args.trace, "trace.json"))

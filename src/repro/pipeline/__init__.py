@@ -12,4 +12,8 @@ from repro.pipeline.stages import (  # noqa: F401
 from repro.pipeline.runtime import (  # noqa: F401
     Pipeline, PipelineConfig, PipelineContext, platform_config,
 )
+from repro.pipeline.journal import RunJournal  # noqa: F401
 from repro.pipeline.scheduler import run_dag  # noqa: F401
+from repro.faults import (  # noqa: F401  (shared failure vocabulary)
+    FaultInjector, RetryPolicy,
+)

@@ -10,6 +10,8 @@ run on every platform; validation summarizes across them.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Union
@@ -17,11 +19,14 @@ from typing import Any, Dict, List, Optional, Sequence, Union
 from repro import obs
 from repro.configs import get_config, reduced
 from repro.configs.base import ArchConfig
+from repro.faults import FaultInjector, RetryPolicy
+from repro.pipeline.journal import RunJournal
 from repro.pipeline.scheduler import run_dag
 from repro.pipeline.stages import (BaselineStage, MarkStage, ProfileStage,
                                    ReplayStage, SelectStage, Stage,
                                    ValidateStage)
-from repro.pipeline.store import Artifact, ArtifactStore
+from repro.pipeline.store import (ARTIFACT_KINDS, Artifact, ArtifactStore,
+                                  canonical_json)
 
 
 def platform_config(base: ArchConfig, token: str) -> ArchConfig:
@@ -45,6 +50,12 @@ def platform_config(base: ArchConfig, token: str) -> ArchConfig:
     return dataclasses.replace(base, **changes)
 
 
+# PipelineConfig fields that shape execution, not results: excluded from
+# stage specs (artifact keys) and the journal run key
+EXEC_FIELDS = frozenset({"workers", "max_attempts", "retry_backoff_s",
+                         "stage_timeout_s", "gc_orphans"})
+
+
 @dataclasses.dataclass
 class PipelineConfig:
     arch: str
@@ -62,14 +73,40 @@ class PipelineConfig:
     ckpt_every: int = 0
     defer_analysis: bool = True          # batch (vectorized) interval analysis
     profile_platform: Optional[str] = None   # default: platforms[0]
+    # -- execution-only knobs (EXEC_FIELDS): how the run executes, never
+    # what it computes.  Excluded from every stage spec AND from the run
+    # journal key, so serial/parallel/retried runs share artifact keys
+    # and resume each other's journals.
     # stage-scheduler worker threads: 0/1 = the legacy serial loop, N>1 =
-    # concurrent DAG execution + sharded profile finalize.  Excluded from
-    # every stage spec, so artifact keys are identical either way.
+    # concurrent DAG execution + sharded profile finalize.
     workers: int = 0
+    # stage retry policy (see repro.faults.RetryPolicy): transient
+    # failures retry with exponential backoff + deterministic jitter;
+    # stage_timeout_s bounds each attempt's wall clock (None = no bound)
+    max_attempts: int = 3
+    retry_backoff_s: float = 0.05
+    stage_timeout_s: Optional[float] = None
+    # remove orphaned (uncommitted) artifact dirs at run start — crash
+    # debris from a SIGKILL'd run; disable when other pipelines may be
+    # computing into the same store concurrently
+    gc_orphans: bool = True
 
     @property
     def profile_platform_name(self) -> str:
         return self.profile_platform or self.platforms[0]
+
+    def retry_policy(self) -> RetryPolicy:
+        return RetryPolicy(max_attempts=self.max_attempts,
+                           backoff_s=self.retry_backoff_s,
+                           timeout_s=self.stage_timeout_s)
+
+    def run_key(self) -> str:
+        """Digest identifying the *logical* run (everything except the
+        EXEC_FIELDS) — names the journal file, so a crashed serial run
+        and its parallel rerun append to the same history."""
+        doc = {k: v for k, v in dataclasses.asdict(self).items()
+               if k not in EXEC_FIELDS}
+        return hashlib.sha256(canonical_json(doc).encode()).hexdigest()[:16]
 
     def base_cfg(self) -> ArchConfig:
         cfg = get_config(self.arch)
@@ -96,16 +133,23 @@ class PipelineContext:
     of one platform share a single build)."""
 
     def __init__(self, cfg: PipelineConfig, store: ArtifactStore,
-                 workers: int = 0):
+                 workers: int = 0, journal: Optional[RunJournal] = None):
         self.cfg = cfg
         self.store = store
         self.workers = workers
+        self.journal = journal
         self.artifacts: Dict[str, Artifact] = {}
         self.payloads: Dict[str, Any] = {}
         self.manifest: List[Dict] = []
         self._trainers: Dict[str, Any] = {}
         self._lock = threading.Lock()
         self._trainer_locks: Dict[str, threading.Lock] = {}
+
+    def journal_event(self, kind: str, **fields: Any) -> None:
+        """Append one lifecycle event to the run journal (no-op when the
+        run is not journaled — e.g. bare Stage.run in tests)."""
+        if self.journal is not None:
+            self.journal.append(kind, **fields)
 
     # -- artifact accessors (stage name -> product) --------------------
     def key(self, name: str) -> str:
@@ -154,10 +198,15 @@ class Pipeline:
     """The end-to-end nugget lifecycle as a resumable stage graph."""
 
     def __init__(self, cfg: PipelineConfig,
-                 store: Union[str, ArtifactStore]):
+                 store: Union[str, ArtifactStore],
+                 fault_injector: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.store = (store if isinstance(store, ArtifactStore)
-                      else ArtifactStore(store))
+                      else ArtifactStore(store, injector=fault_injector))
+        self.injector = fault_injector
+        if fault_injector is not None:
+            # an injected store also corrupts payloads post-commit
+            self.store.injector = fault_injector
 
     def stages(self) -> List[Stage]:
         out: List[Stage] = [ProfileStage(), SelectStage(), MarkStage()]
@@ -182,26 +231,61 @@ class Pipeline:
         The manifest embeds an ``obs`` block: the process metrics snapshot
         (store hit/miss/bytes, per-stage wall-time histograms, trainer and
         analyzer metrics) plus whether tracing was live for the run.
+
+        Fault tolerance (see ``docs/robustness.md``): orphaned
+        uncommitted artifact dirs are gc'd at run start, every stage
+        start/commit is journaled (fsync'd JSONL under
+        ``<store>/.journal/``), transient stage failures retry per
+        ``cfg.retry_policy()``, and the manifest's ``fault_tolerance``
+        block reports retries/timeouts/worker failures/quarantines plus
+        the stages a crashed predecessor had already committed
+        (``resumed_stages``).
         """
-        n_workers = self.cfg.workers if workers is None else workers
+        cfg = self.cfg
+        n_workers = cfg.workers if workers is None else workers
         stages = self.stages()
         order = [s.name for s in stages]
         by_name = {s.name: s for s in stages}
-        ctx = PipelineContext(self.cfg, self.store, workers=n_workers)
+        gc_removed = self.store.gc() if cfg.gc_orphans else []
+        journal_path = os.path.join(self.store.root, ".journal",
+                                    f"run-{cfg.run_key()}.jsonl")
+        prior = RunJournal.committed(RunJournal.read(journal_path))
+        journal = RunJournal(journal_path)
+        ctx = PipelineContext(cfg, self.store, workers=n_workers,
+                              journal=journal)
         deps = {s.name: s.deps(ctx) for s in stages}
+        injector = self.injector
+
+        def node(name: str) -> None:
+            if injector is not None:
+                injector.fire("stage", name)
+            by_name[name].run(ctx)
+
         t0 = time.perf_counter()
-        with obs.span("pipeline.run", arch=self.cfg.arch,
-                      platforms=list(self.cfg.platforms),
-                      selector=self.cfg.selector, workers=n_workers):
-            run_dag(order, deps, lambda name: by_name[name].run(ctx),
-                    max_workers=n_workers, thread_name_prefix="pipe")
+        journal.append("run_start", pid=os.getpid(), arch=cfg.arch,
+                       workers=n_workers, prior_commits=len(prior))
+        try:
+            with obs.span("pipeline.run", arch=cfg.arch,
+                          platforms=list(cfg.platforms),
+                          selector=cfg.selector, workers=n_workers):
+                stats = run_dag(order, deps, node, max_workers=n_workers,
+                                thread_name_prefix="pipe",
+                                retry=cfg.retry_policy())
+        except BaseException as e:
+            journal.append("run_end", status="error",
+                           error=type(e).__name__)
+            journal.close()
+            raise
+        journal.append("run_end", status="ok")
+        journal.close()
         # stages record completion concurrently; report them in graph
         # declaration order so serial and parallel manifests are comparable
         entries = {e["stage"]: e for e in ctx.manifest}
         manifest = [entries[name] for name in order]
         hits = sum(1 for s in manifest if s["cache_hit"])
+        orphans = {k: len(self.store.orphans(k)) for k in ARTIFACT_KINDS}
         return {
-            "config": dataclasses.asdict(self.cfg),
+            "config": dataclasses.asdict(cfg),
             "store": self.store.root,
             "workers": n_workers,
             "stages": manifest,
@@ -209,6 +293,19 @@ class Pipeline:
             "cache_hits": hits,
             "cache_misses": len(manifest) - hits,
             "wall_s": time.perf_counter() - t0,
+            "fault_tolerance": {
+                "retries": stats["retries"],
+                "timeouts": stats["timeouts"],
+                "worker_failures": stats["worker_failures"],
+                "fallback_serial": stats["fallback_serial"],
+                "quarantined": self.store.counters["quarantined"],
+                "journal": journal_path,
+                "resumed_stages": sorted(prior),
+                "orphans_removed": gc_removed,
+                "orphans": {k: n for k, n in orphans.items() if n},
+                "faults": (injector.summary()
+                           if injector is not None else None),
+            },
             "obs": {"traced": obs.enabled(),
                     "store_counters": dict(self.store.counters),
                     "metrics": obs.metrics().snapshot()},

@@ -67,13 +67,19 @@ class Stage:
     # -- uniform driver ------------------------------------------------
     def run(self, ctx) -> Artifact:
         t0 = time.perf_counter()
+        journal = getattr(ctx, "journal_event", None)
         with obs.span(f"stage.{self.name}", kind=self.kind) as sp:
             art = ctx.store.resolve(self.kind, self.spec(ctx),
                                     self.upstream(ctx))
+            if journal is not None:
+                journal("stage_start", stage=self.name,
+                        artifact_kind=self.kind, key=art.key)
             # single-flight: concurrent stages (or pipelines) resolving
-            # the same key serialize here — one computes, the rest load
+            # the same key serialize here — one computes, the rest load.
+            # ``lookup`` = exists + payload verification: a corrupt
+            # artifact is quarantined and recomputed as a plain miss.
             with ctx.store.single_flight(art.key):
-                hit = ctx.store.exists(art)
+                hit = ctx.store.lookup(art)
                 if hit:
                     with obs.span(f"stage.{self.name}.load"):
                         payload = self.load(ctx.store, art)
@@ -83,6 +89,9 @@ class Stage:
                     with obs.span(f"stage.{self.name}.save"):
                         self.save(ctx.store, art, payload)
                         ctx.store.commit(art)
+            if journal is not None:
+                journal("stage_commit", stage=self.name, key=art.key,
+                        cache_hit=hit)
             sp.set(key=art.key, cache_hit=hit,
                    upstream=[k[:12] for k in art.upstream])
         wall = time.perf_counter() - t0

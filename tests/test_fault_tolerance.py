@@ -33,6 +33,21 @@ def test_straggler_strikes_recorded():
     assert any(e["kind"] == "straggler" for e in co.events)
 
 
+def test_step_time_window_is_per_instance():
+    """Regression: ``_times`` was a class attribute, so a coordinator
+    inherited another's step-time history — a fresh fleet's first slow
+    sample compared against a stale median and flagged a phantom
+    straggler."""
+    co1 = HeartbeatCoordinator(1, timeout_s=10, straggler_factor=2.0)
+    for s in range(20):
+        co1.heartbeat(0, s, step_time_s=0.1)
+    co2 = HeartbeatCoordinator(1, timeout_s=10, straggler_factor=2.0)
+    co2.heartbeat(0, 0, step_time_s=1.0)      # its own first sample
+    assert co2._times == [1.0]
+    assert not co2.events, "fresh coordinator must not inherit medians"
+    assert co2.workers[0].slow_strikes == 0
+
+
 @pytest.mark.slow
 def test_fault_injected_training_matches_uninterrupted(tmp_path):
     """Kill the 'fleet' at steps 7 and 13; restart from checkpoints; the

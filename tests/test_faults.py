@@ -1,0 +1,221 @@
+"""Unit tests for the shared failure vocabulary (``repro.faults``):
+spec parsing, transient/fatal classification, retry backoff, and the
+deterministic fault injector."""
+import os
+import time
+
+import pytest
+
+from repro import obs
+from repro.faults import (
+    FaultInjector, FaultError, InjectedFatal, InjectedFault, RetryPolicy,
+    StageTimeout, TransientError, WorkerKilled, classify, fault_event,
+    parse_fault_spec,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.configure(trace=False, reset_metrics=True)
+    yield
+    obs.configure(trace=False, reset_metrics=True)
+
+
+# -- spec parsing -------------------------------------------------------
+def test_parse_single_rule_defaults():
+    (r,) = parse_fault_spec("raise")
+    assert (r.kind, r.stage, r.p, r.n, r.s) == ("raise", "*", 1.0, -1, 0.0)
+
+
+def test_parse_destructive_kinds_default_one_shot():
+    for kind in ("kill", "stall", "corrupt", "fatal"):
+        (r,) = parse_fault_spec(kind)
+        assert r.n == 1, f"{kind} must default to a budget of one firing"
+    (r,) = parse_fault_spec("kill:n=5")
+    assert r.n == 5                     # explicit budget wins
+
+
+def test_parse_params_and_multiple_rules():
+    rules = parse_fault_spec(
+        "raise:stage=profile,p=0.3; corrupt:stage=baseline@*,n=2 ;"
+        "stall:s=1.5")
+    assert [r.kind for r in rules] == ["raise", "corrupt", "stall"]
+    assert rules[0].stage == "profile" and rules[0].p == 0.3
+    assert rules[1].stage == "baseline@*" and rules[1].n == 2
+    assert rules[2].s == 1.5
+
+
+@pytest.mark.parametrize("bad", [
+    "explode",                 # unknown kind
+    "raise:p0.3",              # malformed param (no '=')
+    "raise:frequency=2",       # unknown param
+])
+def test_parse_malformed_raises(bad):
+    with pytest.raises(ValueError):
+        parse_fault_spec(bad)
+
+
+# -- classification -----------------------------------------------------
+@pytest.mark.parametrize("exc", [
+    TransientError("t"), InjectedFault("i"), StageTimeout("s"),
+    WorkerKilled("w"), OSError("os"), ConnectionError("c"),
+    TimeoutError("to"),
+])
+def test_classify_transient(exc):
+    assert classify(exc) == "transient"
+
+
+@pytest.mark.parametrize("exc", [
+    ValueError("v"), AssertionError("a"), InjectedFatal("f"),
+    FaultError("base"), RuntimeError("r"),
+])
+def test_classify_fatal(exc):
+    assert classify(exc) == "fatal"
+
+
+def test_fault_event_shape():
+    assert fault_event("dead", worker=3) == {"kind": "dead", "worker": 3}
+
+
+# -- retry policy -------------------------------------------------------
+def test_delay_deterministic_and_exponential():
+    p = RetryPolicy(backoff_s=0.05, backoff_factor=2.0, jitter_frac=0.25)
+    d1, d2, d3 = (p.delay("mark", k) for k in (1, 2, 3))
+    assert d1 == p.delay("mark", 1)     # no global RNG: replays identically
+    # jitter is bounded to [1, 1.25): successive attempts strictly grow
+    assert 0.05 <= d1 < 0.05 * 1.25
+    assert 0.10 <= d2 < 0.10 * 1.25
+    assert 0.20 <= d3 < 0.20 * 1.25
+    assert p.delay("mark", 1) != p.delay("profile", 1)  # per-key jitter
+
+
+def test_delay_caps_at_max_backoff():
+    p = RetryPolicy(backoff_s=1.0, max_backoff_s=4.0, jitter_frac=0.0)
+    assert p.delay("x", 50) == 4.0
+
+
+# -- injector -----------------------------------------------------------
+def test_injector_replays_identically():
+    spec, seed = "raise:p=0.4", 7
+    def schedule():
+        inj = FaultInjector.from_spec(spec, seed=seed)
+        fired = []
+        for i in range(50):
+            try:
+                inj.fire("stage", f"site{i % 3}")
+            except InjectedFault:
+                fired.append(i)
+        return fired
+    a, b = schedule(), schedule()
+    assert a == b and 0 < len(a) < 50
+
+
+def test_injector_different_seed_different_schedule():
+    def schedule(seed):
+        inj = FaultInjector.from_spec("raise:p=0.5", seed=seed)
+        fired = []
+        for i in range(64):
+            try:
+                inj.fire("stage", "s")
+            except InjectedFault:
+                fired.append(i)
+        return fired
+    assert schedule(1) != schedule(2)
+
+
+def test_kill_budget_is_one_shot():
+    inj = FaultInjector.from_spec("kill")
+    with pytest.raises(WorkerKilled):
+        inj.fire("stage", "mark")
+    inj.fire("stage", "mark")           # budget spent: no raise
+    (rule,) = inj.rules
+    assert rule.fired == 1 and rule.calls == 2
+
+
+def test_stage_filter_is_fnmatch():
+    inj = FaultInjector.from_spec("raise:stage=baseline@*,n=-1")
+    inj.fire("stage", "profile")        # filtered: no raise
+    with pytest.raises(InjectedFault):
+        inj.fire("stage", "baseline@f32")
+    with pytest.raises(InjectedFault):
+        inj.fire("stage", "baseline@bf16")
+
+
+def test_fatal_rule_raises_injected_fatal():
+    inj = FaultInjector.from_spec("fatal:stage=mark")
+    with pytest.raises(InjectedFatal):
+        inj.fire("stage", "mark")
+    assert classify(InjectedFatal("x")) == "fatal"
+
+
+def test_stall_sleeps():
+    inj = FaultInjector.from_spec("stall:s=0.05")
+    t0 = time.perf_counter()
+    inj.fire("stage", "any")
+    assert time.perf_counter() - t0 >= 0.05
+    t0 = time.perf_counter()
+    inj.fire("stage", "any")            # one-shot: second call is free
+    assert time.perf_counter() - t0 < 0.05
+
+
+def test_corrupt_flips_payload_byte(tmp_path):
+    d = tmp_path / "artifact"
+    d.mkdir()
+    (d / "payload.json").write_bytes(b'{"v": 1}')
+    (d / "spec.json").write_bytes(b'{"key": "k"}')
+    inj = FaultInjector.from_spec("corrupt")
+    assert inj.fire("stage", "any") is None       # corrupt ignores fire()
+    assert inj.corrupt(str(d), "profile") is True
+    assert (d / "payload.json").read_bytes()[0] == b"{"[0] ^ 0xFF
+    assert (d / "spec.json").read_bytes() == b'{"key": "k"}'  # marker intact
+    assert inj.corrupt(str(d), "profile") is False  # budget spent
+
+
+def test_corrupt_refunds_budget_when_nothing_to_corrupt(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    inj = FaultInjector.from_spec("corrupt")
+    assert inj.corrupt(str(empty), "profile") is False
+    assert inj.rules[0].fired == 0      # refunded: still armed
+    full = tmp_path / "full"
+    full.mkdir()
+    (full / "data.bin").write_bytes(b"\x00\x01")
+    assert inj.corrupt(str(full), "profile") is True
+    assert (full / "data.bin").read_bytes() == b"\xff\x01"
+
+
+def test_events_and_summary_account_firings():
+    inj = FaultInjector.from_spec("raise:n=1;kill:n=1")
+    with pytest.raises(InjectedFault):
+        inj.fire("stage", "a")
+    with pytest.raises(WorkerKilled):
+        inj.fire("stage", "b")
+    s = inj.summary()
+    assert [e["kind"] for e in s["events"]] == ["raise", "kill"]
+    assert [e["site"] for e in s["events"]] == ["a", "b"]
+    assert all(r["fired"] == 1 for r in s["rules"])
+    snap = obs.metrics().snapshot()
+    assert snap["faults.raise"]["value"] == 1
+    assert snap["faults.kill"]["value"] == 1
+
+
+# -- env construction ---------------------------------------------------
+def test_from_env_unset_returns_none():
+    assert FaultInjector.from_env({}) is None
+    assert FaultInjector.from_env({"REPRO_FAULTS": "  "}) is None
+
+
+def test_from_env_builds_with_seed():
+    inj = FaultInjector.from_env({"REPRO_FAULTS": "raise:p=0.1;kill",
+                                  "REPRO_FAULT_SEED": "42"})
+    assert inj is not None and inj.seed == 42
+    assert [r.kind for r in inj.rules] == ["raise", "kill"]
+
+
+def test_from_env_reads_process_environ(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "stall:s=0")
+    monkeypatch.setenv("REPRO_FAULT_SEED", "3")
+    inj = FaultInjector.from_env()
+    assert inj is not None and inj.seed == 3 and inj.rules[0].kind == "stall"
+    monkeypatch.delenv("REPRO_FAULTS")
+    assert FaultInjector.from_env() is None

@@ -1,0 +1,314 @@
+"""Fault-tolerant pipeline execution: artifact integrity (hash-on-commit,
+verify-on-hit, quarantine), the crash-resume run journal, orphan gc, and
+the end-to-end fault-injection acceptance runs (slow suite)."""
+import dataclasses
+import json
+import os
+import threading
+
+import pytest
+
+from repro import obs
+from repro.faults import FaultInjector, InjectedFatal
+from repro.pipeline import (
+    ArtifactStore, Pipeline, PipelineConfig, RunJournal,
+)
+from repro.pipeline.stages import Stage
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.configure(trace=False, reset_metrics=True)
+    yield
+    obs.configure(trace=False, reset_metrics=True)
+
+
+def _committed_artifact(store, spec=None):
+    art = store.resolve("validation", spec or {"x": 1})
+    store.write_json(art, "payload.json", {"answer": 42})
+    store.write_json(art, "extra.json", [1, 2, 3])
+    store.commit(art)
+    return art
+
+
+# -- integrity: hash-on-commit, verify-on-hit, quarantine ---------------
+def test_commit_records_payload_hashes(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = _committed_artifact(store)
+    with open(os.path.join(art.path, "spec.json")) as f:
+        doc = json.load(f)
+    assert sorted(doc["files"]) == ["extra.json", "payload.json"]
+    import hashlib
+    for rel, want in doc["files"].items():
+        with open(os.path.join(art.path, rel), "rb") as f:
+            assert hashlib.sha256(f.read()).hexdigest() == want
+
+
+def test_verify_catches_flipped_byte(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = _committed_artifact(store)
+    assert store.verify(art) is True
+    p = os.path.join(art.path, "payload.json")
+    with open(p, "r+b") as f:
+        b = f.read(1)
+        f.seek(0)
+        f.write(bytes([b[0] ^ 0xFF]))
+    assert store.verify(art) is False
+    assert store.counters["verified"] == 2
+    assert store.counters["verify_s"] > 0
+
+
+def test_verify_missing_payload_file_fails(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = _committed_artifact(store)
+    os.unlink(os.path.join(art.path, "extra.json"))
+    assert store.verify(art) is False
+
+
+def test_legacy_artifact_without_hashes_passes(tmp_path):
+    # artifacts committed before integrity recording have no "files"
+    store = ArtifactStore(str(tmp_path))
+    art = _committed_artifact(store)
+    marker = os.path.join(art.path, "spec.json")
+    with open(marker) as f:
+        doc = json.load(f)
+    del doc["files"]
+    with open(marker, "w") as f:
+        json.dump(doc, f)
+    assert store.verify(art) is True
+    assert store.lookup(art) is True
+
+
+def test_lookup_quarantines_corrupt_artifact(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = _committed_artifact(store)
+    with open(os.path.join(art.path, "payload.json"), "ab") as f:
+        f.write(b"garbage")
+    assert store.lookup(art) is False          # corrupt hit -> miss
+    assert not os.path.exists(art.path)        # moved out of the cache
+    qdir = os.path.join(store.root, ArtifactStore.QUARANTINE)
+    assert os.listdir(qdir) == [f"validation-{art.key}"]
+    assert store.counters["quarantined"] == 1
+    # same key re-quarantined later gets a distinct suffix
+    _committed_artifact(store)
+    with open(os.path.join(art.path, "payload.json"), "ab") as f:
+        f.write(b"garbage")
+    assert store.lookup(art) is False
+    assert sorted(os.listdir(qdir)) == [
+        f"validation-{art.key}", f"validation-{art.key}.1"]
+
+
+class _PayloadStage(Stage):
+    kind = "validation"
+    name = "payload"
+
+    def __init__(self):
+        self.computes = 0
+
+    def spec(self, ctx):
+        return {"fixed": 1}
+
+    def compute(self, ctx):
+        self.computes += 1
+        return {"value": 42}
+
+    def save(self, store, art, payload):
+        store.write_json(art, "payload.json", payload)
+
+    def load(self, store, art):
+        return store.read_json(art, "payload.json")
+
+
+class _StageCtx:
+    def __init__(self, store):
+        self.store = store
+        self.records = []
+
+    def record(self, stage, art, payload, hit, wall_s):
+        self.records.append((payload, hit))
+
+
+def test_corrupt_artifact_recomputed_as_plain_miss(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    stage, ctx = _PayloadStage(), _StageCtx(store)
+    art = stage.run(ctx)
+    with open(os.path.join(art.path, "payload.json"), "ab") as f:
+        f.write(b"!")
+    stage.run(ctx)                              # quarantine + recompute
+    stage.run(ctx)                              # clean hit again
+    assert stage.computes == 2
+    assert [h for _, h in ctx.records] == [False, False, True]
+    assert all(p == {"value": 42} for p, _ in ctx.records)
+
+
+def test_injector_corruption_caught_on_next_lookup(tmp_path):
+    inj = FaultInjector.from_spec("corrupt:stage=validation,n=1")
+    store = ArtifactStore(str(tmp_path), injector=inj)
+    stage, ctx = _PayloadStage(), _StageCtx(store)
+    stage.run(ctx)                              # commit corrupts the payload
+    assert inj.rules[0].fired == 1
+    stage.run(ctx)                              # verify -> quarantine -> redo
+    assert stage.computes == 2
+    assert store.counters["quarantined"] == 1
+
+
+# -- atomic write_json --------------------------------------------------
+def test_write_json_leaves_no_temp_files(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = store.resolve("validation", {"x": 2})
+    store.write_json(art, "payload.json", {"ok": True})
+    assert not [f for f in os.listdir(art.path) if f.endswith(".tmp")]
+
+
+def test_write_json_failure_preserves_existing_payload(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = store.resolve("validation", {"x": 3})
+    store.write_json(art, "payload.json", {"ok": True})
+    with pytest.raises(TypeError):
+        store.write_json(art, "payload.json", {"bad": object()})
+    assert store.read_json(art, "payload.json") == {"ok": True}
+    assert not [f for f in os.listdir(art.path) if f.endswith(".tmp")]
+
+
+# -- orphans + gc -------------------------------------------------------
+def test_orphans_listed_and_gced_committed_survive(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    art = _committed_artifact(store)
+    orphan = store.resolve("validation", {"crashed": True})
+    store.write_json(orphan, "partial.json", {"half": "written"})
+    assert store.orphans("validation") == [orphan.key]
+    assert store.keys("validation") == [art.key]
+    removed = store.gc()
+    assert removed == [f"validation/{orphan.key}"]
+    assert not os.path.exists(orphan.path)
+    assert os.path.exists(art.path)             # committed untouched
+    assert store.orphans("validation") == []
+
+
+def test_gc_min_age_spares_fresh_orphans(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    orphan = store.resolve("validation", {"inflight": True})
+    store.write_json(orphan, "partial.json", {})
+    assert store.gc(min_age_s=3600) == []       # too fresh: in-flight peer?
+    assert os.path.exists(orphan.path)
+    assert store.gc() == [f"validation/{orphan.key}"]
+
+
+# -- run journal --------------------------------------------------------
+def test_journal_roundtrip_and_committed(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    with RunJournal(path) as j:
+        j.append("run_start", run_key="abc")
+        j.append("stage_start", stage="profile", key="k1")
+        j.append("stage_commit", stage="profile", key="k1", cache_hit=False)
+        j.append("stage_start", stage="select", key="k2")
+    events = RunJournal.read(path)
+    assert [e["kind"] for e in events] == [
+        "run_start", "stage_start", "stage_commit", "stage_start"]
+    assert all("t" in e for e in events)
+    # only committed stages resume; the torn stage_start does not
+    assert RunJournal.committed(events) == {"profile": "k1"}
+
+
+def test_journal_read_skips_torn_tail(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    with RunJournal(path) as j:
+        j.append("stage_commit", stage="mark", key="k9", cache_hit=False)
+    with open(path, "a") as f:
+        f.write('{"kind": "stage_co')        # crash mid-append
+    events = RunJournal.read(path)
+    assert len(events) == 1
+    assert RunJournal.committed(events) == {"mark": "k9"}
+    assert RunJournal.read(str(tmp_path / "missing.jsonl")) == []
+
+
+def test_journal_threadsafe_append(tmp_path):
+    path = str(tmp_path / "run.jsonl")
+    j = RunJournal(path)
+    threads = [threading.Thread(
+        target=lambda i=i: j.append("stage_commit", stage=f"s{i}",
+                                    key=f"k{i}", cache_hit=False))
+        for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    j.close()
+    events = RunJournal.read(path)
+    assert len(events) == 16
+    assert len(RunJournal.committed(events)) == 16
+
+
+# -- end-to-end crash-resume + fault storm (slow suite) -----------------
+CFG = PipelineConfig(
+    arch="olmoe-1b-7b", platforms=("f32",), selector="random",
+    selector_args={"n_samples": 3, "seed": 0},
+    steps=8, seq_len=16, batch=2, interval_steps=2.0, seed=0)
+
+
+def test_run_key_ignores_execution_fields():
+    serial = CFG
+    tuned = dataclasses.replace(CFG, workers=4, max_attempts=7,
+                                retry_backoff_s=1.0, stage_timeout_s=60.0,
+                                gc_orphans=False)
+    assert serial.run_key() == tuned.run_key()
+    assert serial.run_key() != dataclasses.replace(CFG, steps=9).run_key()
+
+
+def _keys(manifest):
+    return {s["stage"]: s["key"] for s in manifest["stages"]}
+
+
+def _hits(manifest):
+    return {s["stage"]: s["cache_hit"] for s in manifest["stages"]}
+
+
+@pytest.mark.slow
+def test_crash_resume_bit_identical(tmp_path):
+    """A run killed mid-graph resumes from committed artifacts and ends
+    with digests identical to an uninterrupted run."""
+    ref = Pipeline(CFG, str(tmp_path / "clean")).run()
+    store = str(tmp_path / "crashed")
+    inj = FaultInjector.from_spec("fatal:stage=baseline@f32")
+    with pytest.raises(InjectedFatal):
+        Pipeline(CFG, store, fault_injector=inj).run()
+    jpath = os.path.join(store, ".journal", f"run-{CFG.run_key()}.jsonl")
+    committed = RunJournal.committed(RunJournal.read(jpath))
+    assert committed, "crash must leave committed stages behind"
+    resumed = Pipeline(CFG, store).run()
+    ft = resumed["fault_tolerance"]
+    assert sorted(committed) == ft["resumed_stages"]
+    for stage in committed:
+        assert _hits(resumed)[stage], f"{stage} must warm-resume"
+    assert _keys(resumed) == _keys(ref)
+    assert resumed["fault_tolerance"]["quarantined"] == 0
+
+
+@pytest.mark.slow
+def test_fault_storm_still_converges(tmp_path):
+    """Acceptance: transient raises at p=0.3, one corrupted payload and
+    one worker kill — the run completes with digests equal to a clean
+    run, and the corruption is quarantined on the next warm pass."""
+    ref = Pipeline(CFG, str(tmp_path / "clean")).run()
+    storm_cfg = dataclasses.replace(CFG, workers=2, max_attempts=5,
+                                    retry_backoff_s=0.01)
+    store = str(tmp_path / "storm")
+    inj = FaultInjector.from_spec(
+        "raise:p=0.3;corrupt:stage=profile,n=1;kill:n=1", seed=3)
+    manifest = Pipeline(storm_cfg, store, fault_injector=inj).run()
+    assert _keys(manifest) == _keys(ref)
+    ft = manifest["fault_tolerance"]
+    assert ft["retries"] > 0
+    assert ft["worker_failures"] == 1
+    fired = {e["kind"] for e in ft["faults"]["events"]}
+    assert fired == {"raise", "kill", "corrupt"}
+    # warm rerun: the corrupted profile is quarantined + recomputed,
+    # every clean downstream artifact hits (input-addressed keys held)
+    rerun = Pipeline(CFG, store).run()
+    assert _keys(rerun) == _keys(ref)
+    hits = _hits(rerun)
+    assert hits["profile"] is False
+    assert all(h for s, h in hits.items() if s != "profile")
+    assert rerun["fault_tolerance"]["quarantined"] == 1
+    qdir = os.path.join(store, ArtifactStore.QUARANTINE)
+    assert any(n.startswith("profile-") for n in os.listdir(qdir))

@@ -225,3 +225,163 @@ def test_single_flight_reentrant_for_commit(tmp_path):
         store.write_json(art, "payload.json", {})
         store.commit(art)          # must not deadlock on the same key lock
     assert store.exists(art)
+
+
+# -- failure paths ------------------------------------------------------
+from repro.faults import (  # noqa: E402
+    InjectedFault, RetryPolicy, StageTimeout, WorkerKilled,
+)
+
+FAST_RETRY = RetryPolicy(max_attempts=3, backoff_s=0.001, jitter_frac=0.0)
+
+
+def _fail_n_times(n, exc_factory, log=None):
+    """run(name) that raises the first ``n`` calls per node, then passes."""
+    calls = {}
+    lock = threading.Lock()
+
+    def run(name):
+        with lock:
+            calls[name] = calls.get(name, 0) + 1
+            k = calls[name]
+        if log is not None:
+            with lock:
+                log.append((name, k))
+        if k <= n:
+            raise exc_factory(name)
+    run.calls = calls
+    return run
+
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_transient_failure_retries_then_succeeds(workers):
+    run = _fail_n_times(1, lambda n: InjectedFault(f"{n} flaked"))
+    stats = run_dag(["a", "b"], {"a": [], "b": ["a"]}, run,
+                    max_workers=workers, retry=FAST_RETRY)
+    assert run.calls == {"a": 2, "b": 2}
+    assert stats["retries"] == 2
+    assert stats["timeouts"] == 0 and not stats["fallback_serial"]
+    assert obs.metrics().snapshot()["pipeline.retries"]["value"] == 2
+
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_transient_exhausts_attempts_then_raises(workers):
+    run = _fail_n_times(99, lambda n: InjectedFault(f"{n} flaked"))
+    with pytest.raises(InjectedFault):
+        run_dag(["a"], {"a": []}, run, max_workers=workers, retry=FAST_RETRY)
+    assert run.calls == {"a": FAST_RETRY.max_attempts}
+
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_fatal_failure_not_retried(workers):
+    run = _fail_n_times(1, lambda n: ValueError(f"{n} is buggy"))
+    with pytest.raises(ValueError):
+        run_dag(["a"], {"a": []}, run, max_workers=workers, retry=FAST_RETRY)
+    assert run.calls == {"a": 1}, "fatal errors must surface on attempt 1"
+
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_timeout_fires_mid_stage_then_retry_succeeds(workers):
+    """Attempt 1 stalls past the wall-clock budget -> StageTimeout is
+    transient -> attempt 2 runs fast and the node completes."""
+    calls = {}
+    lock = threading.Lock()
+
+    def run(name):
+        with lock:
+            calls[name] = calls.get(name, 0) + 1
+            k = calls[name]
+        if k == 1:
+            time.sleep(5.0)        # stalls well past the 0.1s budget
+
+    retry = RetryPolicy(max_attempts=3, backoff_s=0.001, jitter_frac=0.0,
+                        timeout_s=0.1)
+    stats = run_dag(["a"], {"a": []}, run, max_workers=workers, retry=retry)
+    assert calls == {"a": 2}
+    assert stats["timeouts"] == 1 and stats["retries"] == 1
+    assert obs.metrics().snapshot()["pipeline.timeouts"]["value"] == 1
+
+
+def test_timeout_exhausts_attempts_raises_stage_timeout():
+    retry = RetryPolicy(max_attempts=2, backoff_s=0.001, jitter_frac=0.0,
+                        timeout_s=0.05)
+    with pytest.raises(StageTimeout, match="wall-clock"):
+        run_dag(["a"], {"a": []}, lambda n: time.sleep(5.0), retry=retry)
+
+
+def test_worker_kill_requeues_without_fallback():
+    """One worker death: the node is rescheduled on the pool and the run
+    completes with no serial downgrade."""
+    run = _fail_n_times(1, lambda n: WorkerKilled(f"{n} worker died"))
+    stats = run_dag(["a", "b"], {"a": [], "b": ["a"]},
+                    lambda n: run(n) if n == "b" else None, max_workers=2)
+    assert stats["worker_failures"] == 1
+    assert not stats["fallback_serial"]
+    assert run.calls == {"b": 2}
+
+
+def test_repeated_worker_kills_degrade_to_serial():
+    """serial_fallback_after deaths drain the pool and the remaining
+    graph finishes on the caller's thread."""
+    kills = _fail_n_times(2, lambda n: WorkerKilled(f"{n} worker died"))
+    done = []
+    lock = threading.Lock()
+    caller = threading.current_thread().name
+
+    def run(name):
+        if name == "b":
+            kills(name)
+        with lock:
+            done.append((name, threading.current_thread().name))
+
+    stats = run_dag(["a", "b", "c"], {"a": [], "b": ["a"], "c": ["b"]},
+                    run, max_workers=2, serial_fallback_after=2)
+    assert stats["worker_failures"] == 2
+    assert stats["fallback_serial"] is True
+    assert sorted(n for n, _ in done) == ["a", "b", "c"]
+    # the post-degrade tail ran on the calling thread, not the pool
+    tail_threads = {t for n, t in done if n in ("b", "c")}
+    assert tail_threads == {caller}
+    assert obs.metrics().snapshot()["scheduler.fallback_serial"]["value"] == 1
+
+
+def test_worker_kill_on_caller_thread_retries_like_transient():
+    # serial mode has no worker to lose: a kill is just a transient error
+    run = _fail_n_times(1, lambda n: WorkerKilled(f"{n} died"))
+    stats = run_dag(["a"], {"a": []}, run, max_workers=0, retry=FAST_RETRY)
+    assert run.calls == {"a": 2}
+    assert stats["retries"] == 1 and stats["worker_failures"] == 0
+
+
+class _FlakyOnceStage(_CountingStage):
+    """Compute fails transiently exactly once (globally), then succeeds."""
+
+    def __init__(self):
+        super().__init__()
+        self.failures = 0
+
+    def compute(self, ctx):
+        with self._lock:
+            first = self.computes == 0 and self.failures == 0
+            if first:
+                self.failures += 1
+        if first:
+            raise InjectedFault("first compute flaked")
+        return super().compute(ctx)
+
+
+def test_single_flight_loser_sees_winners_retried_result(tmp_path):
+    """Two nodes race the same artifact key; the first compute fails
+    transiently.  The retry machinery must leave BOTH records holding the
+    winner's good payload — never the failed attempt."""
+    store = ArtifactStore(str(tmp_path))
+    stage = _FlakyOnceStage()
+    ctx = _DummyCtx(store)
+    stats = run_dag(["n1", "n2"], {"n1": [], "n2": []},
+                    lambda name: stage.run(ctx),
+                    max_workers=2, retry=FAST_RETRY)
+    assert stats["retries"] == 1
+    assert stage.failures == 1 and stage.computes == 1
+    assert len(ctx.records) == 2
+    assert all(p == {"value": 42} for _, _, p, _ in ctx.records)
+    assert len({k for _, k, _, _ in ctx.records}) == 1
